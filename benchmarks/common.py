@@ -1,0 +1,41 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def save_results(name: str, rows: List[Dict[str, Any]]):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+
+
+def print_csv(name: str, rows: List[Dict[str, Any]], cols: List[str]):
+    print(f"\n# {name}")
+    print(",".join(["bench"] + cols))
+    for r in rows:
+        print(",".join([name] + [f"{r.get(c, '')}" for c in cols]))
+
+
+class CharCountApp:
+    """The paper's two-stage toy workload, instantiable under any pattern."""
+
+    FILE_BYTES = 1 << 18
+
+    @staticmethod
+    def mkfile_kernel(instance: int, seed: int = 0):
+        from repro.core import Kernel
+        k = Kernel("misc.mkfile")
+        k.arguments = {"bytes": CharCountApp.FILE_BYTES,
+                       "seed": (seed, instance)}
+        return k
+
+    @staticmethod
+    def ccount_kernel(instance: int):
+        from repro.core import Kernel
+        return Kernel("misc.ccount")

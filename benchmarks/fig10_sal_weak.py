@@ -1,0 +1,45 @@
+"""Fig. 10 reproduction: SAL weak scaling — simulations = slots, 64..1024.
+Expected: simulation phase constant; analysis grows with #simulations."""
+from __future__ import annotations
+
+from benchmarks.common import print_csv, save_results
+from benchmarks.fig9_sal_strong import SALScaling
+from repro.core import SingleClusterEnvironment
+
+SCALES = (64, 128, 256, 512, 1024)
+
+
+def run(scales=SCALES, iters=1) -> list:
+    rows = []
+    for n in scales:
+        cl = SingleClusterEnvironment(resource="local.cpu", cores=n,
+                                      walltime=600, mode="sim")
+        cl.allocate()
+        prof = cl.run(SALScaling(iters, n, 1))
+        cl.deallocate()
+        st = prof.per_stage
+        rows.append({
+            "cores": n, "simulations": n,
+            "ttc_virtual": round(prof.ttc, 3),
+            "pre_loop": round(st.get("pre_loop", {}).get("t_exec", 0.0), 3),
+            "sim_phase": round(
+                st.get("simulation", {}).get("t_exec", 0.0) / n, 3),
+            "analysis_phase": round(
+                st.get("analysis", {}).get("t_exec", 0.0), 3),
+            "t_rts_overhead_real": round(prof.t_rts_overhead, 4),
+            "utilization": round(prof.utilization, 4)})
+    return rows
+
+
+def main(fast: bool = False):
+    rows = run((64, 256) if fast else SCALES)
+    save_results("fig10_sal_weak", rows)
+    print_csv("fig10_sal_weak", rows,
+              ["cores", "simulations", "ttc_virtual", "pre_loop",
+               "sim_phase", "analysis_phase", "t_rts_overhead_real",
+               "utilization"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Fig. 7 reproduction: RE strong scaling — 2560 replicas, 20..2560 slots.
+
+Execution is DES-simulated (calibrated per-replica duration; the paper's
+6 ps Amber segment ~ 100 s on one core); scheduler/bookkeeping overheads are
+measured on the real clock.  Expected: simulation phase time halves per slot
+doubling; exchange time constant (depends only on the fixed replica count).
+"""
+from __future__ import annotations
+
+from benchmarks.common import print_csv, save_results
+from repro.core import Kernel, ReplicaExchange, SingleClusterEnvironment
+
+REPLICAS = 2560
+SLOTS = (20, 40, 80, 160, 320, 640, 1280, 2560)
+SIM_SECONDS = 100.0          # calibrated per-replica MD segment
+EXCH_PER_REPLICA = 0.005     # serial exchange cost per replica
+
+
+class REScaling(ReplicaExchange):
+    def prepare_replica_for_md(self, r):
+        k = Kernel("synthetic.noop")
+        k.sim_duration = SIM_SECONDS
+        return k
+
+    def prepare_exchange(self, replicas):
+        k = Kernel("synthetic.noop")
+        k.sim_duration = EXCH_PER_REPLICA * len(replicas)
+        return k
+
+
+def run(slots=SLOTS, replicas=REPLICAS, cycles=1) -> list:
+    rows = []
+    for n in slots:
+        cl = SingleClusterEnvironment(resource="local.cpu", cores=n,
+                                      walltime=600, mode="sim")
+        cl.allocate()
+        prof = cl.run(REScaling(cycles=cycles, replicas=replicas))
+        cl.deallocate()
+        sim_t = prof.per_stage.get("simulation", {}).get("t_exec", 0.0)
+        exch_t = prof.per_stage.get("exchange", {}).get("t_exec", 0.0)
+        rows.append({
+            "cores": n, "replicas": replicas,
+            "ttc_virtual": round(prof.ttc, 3),
+            "sim_phase": round(prof.ttc - exch_t, 3),
+            "exchange_phase": round(exch_t, 3),
+            "sim_total_slotsec": round(sim_t, 1),
+            "t_rts_overhead_real": round(prof.t_rts_overhead, 4),
+            "t_pattern_overhead_real": round(prof.t_pattern_overhead, 4),
+            "utilization": round(prof.utilization, 4)})
+    return rows
+
+
+def main(fast: bool = False):
+    rows = run(slots=(20, 80, 320) if fast else SLOTS,
+               replicas=320 if fast else REPLICAS)
+    save_results("fig7_re_strong", rows)
+    print_csv("fig7_re_strong", rows,
+              ["cores", "replicas", "ttc_virtual", "sim_phase",
+               "exchange_phase", "t_rts_overhead_real",
+               "t_pattern_overhead_real", "utilization"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Fig. 8 reproduction: RE weak scaling — replicas = slots, 20..2560.
+
+Expected (paper): simulation phase constant; exchange phase grows with the
+replica count (it runs serially over replicas)."""
+from __future__ import annotations
+
+from benchmarks.common import print_csv, save_results
+from benchmarks.fig7_re_strong import (EXCH_PER_REPLICA, SIM_SECONDS,
+                                       REScaling)
+from repro.core import SingleClusterEnvironment
+
+SCALES = (20, 40, 80, 160, 320, 640, 1280, 2560)
+
+
+def run(scales=SCALES, cycles=1) -> list:
+    rows = []
+    for n in scales:
+        cl = SingleClusterEnvironment(resource="local.cpu", cores=n,
+                                      walltime=600, mode="sim")
+        cl.allocate()
+        prof = cl.run(REScaling(cycles=cycles, replicas=n))
+        cl.deallocate()
+        exch_t = prof.per_stage.get("exchange", {}).get("t_exec", 0.0)
+        rows.append({
+            "cores": n, "replicas": n,
+            "ttc_virtual": round(prof.ttc, 3),
+            "sim_phase": round(prof.ttc - exch_t, 3),
+            "exchange_phase": round(exch_t, 3),
+            "t_rts_overhead_real": round(prof.t_rts_overhead, 4),
+            "t_pattern_overhead_real": round(prof.t_pattern_overhead, 4),
+            "utilization": round(prof.utilization, 4)})
+    return rows
+
+
+def main(fast: bool = False):
+    rows = run((20, 80, 320) if fast else SCALES)
+    save_results("fig8_re_weak", rows)
+    print_csv("fig8_re_weak", rows,
+              ["cores", "replicas", "ttc_virtual", "sim_phase",
+               "exchange_phase", "t_rts_overhead_real", "utilization"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Fig. 9 reproduction: SAL strong scaling — 1024 simulations (Amber-CoCo
+analogue), 64..1024 slots.  pre_loop is orders slower than per-iteration
+stages (paper's dual-axis figure); analysis runs serially over simulations.
+"""
+from __future__ import annotations
+
+from benchmarks.common import print_csv, save_results
+from repro.core import Kernel, SimulationAnalysisLoop, SingleClusterEnvironment
+
+SIMS = 1024
+SLOTS = (64, 128, 256, 512, 1024)
+SIM_SECONDS = 60.0           # calibrated 0.6 ps Amber segment
+ANA_PER_SIM = 0.05           # serial CoCo analysis per simulation
+PRE_SECONDS = 600.0          # pre-loop setup (paper: orders larger)
+
+
+class SALScaling(SimulationAnalysisLoop):
+    def __init__(self, maxiterations, simulation_instances,
+                 analysis_instances=1):
+        super().__init__(maxiterations, simulation_instances,
+                         analysis_instances)
+
+    def pre_loop(self):
+        k = Kernel("synthetic.noop")
+        k.sim_duration = PRE_SECONDS
+        return k
+
+    def simulation_stage(self, it, i):
+        k = Kernel("synthetic.noop")
+        k.sim_duration = SIM_SECONDS
+        return k
+
+    def analysis_stage(self, it, j):
+        k = Kernel("synthetic.noop")
+        k.sim_duration = ANA_PER_SIM * self.simulation_instances
+        return k
+
+
+def run(slots=SLOTS, sims=SIMS, iters=1) -> list:
+    rows = []
+    for n in slots:
+        cl = SingleClusterEnvironment(resource="local.cpu", cores=n,
+                                      walltime=600, mode="sim")
+        cl.allocate()
+        prof = cl.run(SALScaling(iters, sims, 1))
+        cl.deallocate()
+        st = prof.per_stage
+        rows.append({
+            "cores": n, "simulations": sims,
+            "ttc_virtual": round(prof.ttc, 3),
+            "pre_loop": round(st.get("pre_loop", {}).get("t_exec", 0.0), 3),
+            "sim_phase": round(
+                st.get("simulation", {}).get("t_exec", 0.0) / n, 3),
+            "analysis_phase": round(
+                st.get("analysis", {}).get("t_exec", 0.0), 3),
+            "t_rts_overhead_real": round(prof.t_rts_overhead, 4),
+            "t_pattern_overhead_real": round(prof.t_pattern_overhead, 4),
+            "utilization": round(prof.utilization, 4)})
+    return rows
+
+
+def main(fast: bool = False):
+    rows = run(slots=(64, 256) if fast else SLOTS,
+               sims=256 if fast else SIMS)
+    save_results("fig9_sal_strong", rows)
+    print_csv("fig9_sal_strong", rows,
+              ["cores", "simulations", "ttc_virtual", "pre_loop",
+               "sim_phase", "analysis_phase", "t_rts_overhead_real",
+               "utilization"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

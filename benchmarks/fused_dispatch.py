@@ -1,0 +1,100 @@
+"""Beyond-paper benchmark: per-cycle dispatch overhead, task mode vs fused
+SPMD mode.
+
+Task mode pays O(N) scheduling+dispatch per cycle (the paper's per-task
+overhead, its Fig.5 dominant term).  Fused mode launches ONE jit'd program
+per cycle regardless of N, with the exchange on-device.  This table is the
+quantitative argument for the TPU-native ensemble execution path."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import print_csv, save_results
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeSpec
+from repro.core import (FusedEnsemble, Kernel, ReplicaExchange,
+                        SingleClusterEnvironment)
+
+SHAPE = ShapeSpec("bench", "train", 32, 2)
+
+
+class TaskModeRE(ReplicaExchange):
+    def __init__(self, cycles, replicas, ens):
+        super().__init__(cycles, replicas)
+        self.ens = ens
+        self.temps = [3e-4 * 1.3 ** i for i in range(replicas)]
+
+    def prepare_replica_for_md(self, r):
+        k = Kernel("lm.train")
+        k.arguments = {"arch": "reduced:gemma2-2b", "steps": 2,
+                       "member": r.id, "ensemble": self.ens,
+                       "lr": self.temps[r.id], "batch": 2, "seq": 32}
+        return k
+
+    def prepare_exchange(self, replicas):
+        k = Kernel("re.exchange")
+        k.arguments = {"replicas": len(replicas),
+                       "cycle": replicas[0].cycle, "temps": self.temps,
+                       "ensemble": self.ens}
+        return k
+
+    def apply_exchange(self, result, replicas):
+        self.temps = result["temps"]
+
+
+def run(members=(2, 4, 8, 16), cycles: int = 2) -> list:
+    cfg = reduced(get_config("gemma2-2b"))
+    rows = []
+    for n in members:
+        # ---- task mode -----------------------------------------------------
+        cl = SingleClusterEnvironment(cores=n, walltime=10)
+        cl.allocate()
+        prof = cl.run(TaskModeRE(cycles, n, ens=f"fd{n}"))
+        cl.deallocate()
+        task_dispatch = (prof.t_rts_overhead + prof.t_pattern_overhead) \
+            / cycles
+
+        # ---- fused mode -----------------------------------------------------
+        fe = FusedEnsemble(cfg, n)
+        cyc = fe._build_cycle(2, SHAPE)
+        from repro.core.ensemble import _stack_steps
+        from repro.data import SyntheticLM
+        import jax.numpy as jnp
+        data = [SyntheticLM(cfg, SHAPE, seed=i) for i in range(n)]
+        batches = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[_stack_steps(data[i], 0, 2) for i in range(n)])
+        ens = fe.init(jax.random.PRNGKey(0))
+        ens, m = cyc(ens, batches, jax.random.PRNGKey(1))  # compile warm-up
+        jax.block_until_ready(m["losses"])
+        key = jax.random.PRNGKey(2)
+        # measure dispatch (host) time: call until async dispatch returns
+        t0 = time.perf_counter()
+        ens2, m = cyc(ens, batches, key)
+        dispatch = time.perf_counter() - t0   # includes device wait on CPU
+        jax.block_until_ready(m["losses"])
+        total = time.perf_counter() - t0
+
+        rows.append({"members": n,
+                     "task_dispatch_per_cycle_s": round(task_dispatch, 5),
+                     "task_dispatch_per_member_ms":
+                         round(1e3 * task_dispatch / n, 3),
+                     "fused_dispatch_per_cycle_s": round(dispatch, 5),
+                     "fused_total_per_cycle_s": round(total, 5)})
+    return rows
+
+
+def main(fast: bool = False):
+    rows = run((2, 4) if fast else (2, 4, 8, 16))
+    save_results("fused_dispatch", rows)
+    print_csv("fused_dispatch", rows,
+              ["members", "task_dispatch_per_cycle_s",
+               "task_dispatch_per_member_ms", "fused_dispatch_per_cycle_s",
+               "fused_total_per_cycle_s"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Aggregate dryrun_results/*.json into the §Roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import print_csv, save_results
+
+
+def load_rows(results_dir: str = "dryrun_results"):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(fn) as f:
+            d = json.load(f)
+        rows.append(d)
+    return rows
+
+
+def main(fast: bool = False):
+    rows = load_rows()
+    ok = [r for r in rows if r.get("status") == "ok"]
+    skip = [r for r in rows if r.get("status") == "skipped"]
+    err = [r for r in rows if r.get("status") == "error"]
+    table = [{
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "t_compute_ms": round(r["t_compute"] * 1e3, 2),
+        "t_memory_ms": round(r["t_memory"] * 1e3, 2),
+        "t_collective_ms": round(r["t_collective"] * 1e3, 2),
+        "bottleneck": r["bottleneck"],
+        "useful_ratio": round(r["useful_ratio"], 3),
+        "roofline_frac": round(r["roofline_frac"], 4),
+    } for r in ok]
+    save_results("roofline_table", table)
+    print_csv("roofline_table", table,
+              ["arch", "shape", "mesh", "t_compute_ms", "t_memory_ms",
+               "t_collective_ms", "bottleneck", "useful_ratio",
+               "roofline_frac"])
+    print(f"\n# {len(ok)} ok, {len(skip)} skipped (documented), "
+          f"{len(err)} errors")
+    for r in err:
+        print(f"#   ERROR {r['arch']} {r['shape']} {r['mesh']}: "
+              f"{r.get('error', '')[:100]}")
+    return table
+
+
+if __name__ == "__main__":
+    main()

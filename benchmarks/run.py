@@ -1,0 +1,57 @@
+"""Benchmark harness: one module per paper exhibit (Figs. 5-10) plus the
+beyond-paper fused-dispatch table and the roofline aggregation.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default mode runs reduced scales (a few minutes on this CPU container);
+--full runs the paper-scale sweeps (2560 replicas etc.; orchestration is
+still real, execution DES-simulated where marked)."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweeps (slower)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args()
+    fast = not args.full
+
+    from benchmarks import (fig5_patterns, fig6_kernels, fig7_re_strong,
+                            fig8_re_weak, fig9_sal_strong, fig10_sal_weak,
+                            fused_dispatch, roofline_table)
+    benches = {
+        "fig5": fig5_patterns.main,
+        "fig6": fig6_kernels.main,
+        "fig7": fig7_re_strong.main,
+        "fig8": fig8_re_weak.main,
+        "fig9": fig9_sal_strong.main,
+        "fig10": fig10_sal_weak.main,
+        "fused": fused_dispatch.main,
+        "roofline": roofline_table.main,
+    }
+    names = args.only.split(",") if args.only else list(benches)
+    t0 = time.time()
+    failures = []
+    for name in names:
+        print(f"\n=== {name} " + "=" * 50, flush=True)
+        try:
+            benches[name](fast=fast)
+        except Exception as e:  # keep the harness going
+            failures.append((name, repr(e)))
+            print(f"BENCH {name} FAILED: {e!r}", file=sys.stderr)
+    print(f"\nall benches done in {time.time()-t0:.1f}s; "
+          f"{len(failures)} failures")
+    for n, e in failures:
+        print(f"  FAILED {n}: {e}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Ensemble toolkit public API (mirrors the paper's import surface):
+
+    from repro.core import Pipeline, ReplicaExchange, SimulationAnalysisLoop
+    from repro.core import Kernel, SingleClusterEnvironment
+"""
+from repro.core.ensemble import FusedEnsemble  # noqa: F401
+from repro.core.execution_plugin import (  # noqa: F401
+    BaseExecutionPlugin,
+    ExecutionProfile,
+    get_plugin,
+)
+from repro.core.kernel_plugin import Kernel, kernel_names, register_kernel  # noqa: F401
+from repro.core.patterns import (  # noqa: F401
+    BagOfTasks,
+    ExecutionPattern,
+    Pipeline,
+    Replica,
+    ReplicaExchange,
+    SimulationAnalysisLoop,
+)
+from repro.core.resource_handler import (  # noqa: F401
+    Pilot,
+    ResourceSpec,
+    SingleClusterEnvironment,
+)

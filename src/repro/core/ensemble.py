@@ -1,0 +1,157 @@
+"""Fused SPMD ensemble execution — the beyond-paper, TPU-native mode.
+
+The paper schedules each replica as an independent task (O(N) dispatch, host
+round-trip at every exchange).  A homogeneous ensemble phase on TPU can
+instead be ONE SPMD program: member states stacked on a leading axis, vmapped
+member steps sharded over the mesh, and the exchange phase computed on-device
+(all-gather of scalar losses + Metropolis swap of the temperature vector).
+Dispatch cost becomes O(1) per *cycle* and the exchange needs no host
+round-trip.  benchmarks/fused_dispatch.py quantifies both against task mode.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import forward, init_params
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.train.losses import chunked_softmax_xent
+
+
+def _member_train_step(cfg: ModelConfig, state, batch, lr):
+    """One member's train step with a *traced* learning rate (the RE/PBT
+    temperature dimension)."""
+    def loss_fn(params):
+        out = forward(cfg, params, batch["tokens"], mesh=None,
+                      remat=cfg.remat != "none")
+        loss, _ = chunked_softmax_xent(cfg, params, out["h"],
+                                       batch["labels"])
+        return loss + 0.01 * out["aux"]
+
+    loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+    grads, gnorm = clip_by_global_norm(grads, 1.0)
+    new_params, new_opt = adamw_update(grads, state["opt"],
+                                       state["params"], lr=lr)
+    return ({"params": new_params, "opt": new_opt,
+             "step": state["step"] + 1}, loss)
+
+
+def metropolis_swap_device(losses, temps, cycle, key):
+    """On-device even/odd Metropolis swap of the temperature vector.
+    losses, temps: (N,).  Returns (new_temps, n_accepted)."""
+    n = losses.shape[0]
+    idx = jnp.arange(n)
+    start = cycle % 2
+    is_left = (idx % 2) == (start % 2)
+    partner = jnp.where(is_left, idx + 1, idx - 1)
+    valid = (partner >= 0) & (partner < n)
+    partner = jnp.clip(partner, 0, n - 1)
+    e_i, e_j = losses, losses[partner]
+    t_i, t_j = temps, temps[partner]
+    d = (e_i - e_j) * (1.0 / t_i - 1.0 / t_j)
+    u = jax.random.uniform(key, (n,), minval=1e-12)
+    # decision made by the left member of each pair, mirrored to the right
+    dec_idx = jnp.where(is_left, idx, partner)
+    accept_left = jnp.log(u)[dec_idx] < jnp.where(is_left, d, -d) * \
+        jnp.where(is_left, 1.0, -1.0)
+    accept = valid & jnp.where(is_left, accept_left, accept_left)
+    new_temps = jnp.where(accept, temps[partner], temps)
+    return new_temps, jnp.sum(accept) // 2
+
+
+class FusedEnsemble:
+    """Homogeneous replica-exchange ensemble as one SPMD program.
+
+    Member axis sharded over the pilot mesh's "data" axis (one slot = one
+    member shard).  ``mesh=None`` runs single-device (CPU tests).
+    """
+
+    def __init__(self, cfg: ModelConfig, n_members: int, *,
+                 mesh=None, base_temp: float = 3e-4, temp_ratio: float = 1.3):
+        self.cfg = cfg
+        self.n = n_members
+        self.mesh = mesh
+        self.temps0 = jnp.array(
+            [base_temp * temp_ratio ** i for i in range(n_members)],
+            jnp.float32)
+        self._cycle_fn = None
+
+    # ------------------------------------------------------------ state
+    def init(self, key) -> Dict[str, Any]:
+        keys = jax.random.split(key, self.n)
+
+        def one(k):
+            params = init_params(self.cfg, k)
+            return {"params": params,
+                    "opt": adamw_init(params, self.cfg.optstate_dtype),
+                    "step": jnp.zeros((), jnp.int32)}
+
+        states = jax.vmap(one)(keys)
+        if self.mesh is not None:
+            spec = jax.tree.map(
+                lambda x: NamedSharding(
+                    self.mesh, P("data", *([None] * (x.ndim - 1)))), states)
+            states = jax.device_put(states, spec)
+        # fresh copy: the ensemble state is donated per cycle and must not
+        # alias self.temps0
+        return {"members": states, "temps": self.temps0 + 0.0,
+                "cycle": jnp.zeros((), jnp.int32)}
+
+    # ------------------------------------------------------------ cycle
+    def _build_cycle(self, steps_per_cycle: int, shape: ShapeSpec):
+        cfg = self.cfg
+
+        def member_steps(state, batches, lr):
+            def body(st, b):
+                st, loss = _member_train_step(cfg, st, b, lr)
+                return st, loss
+            state, losses = jax.lax.scan(body, state, batches)
+            return state, losses[-1]
+
+        vmapped = jax.vmap(member_steps, in_axes=(0, 0, 0))
+
+        def cycle(ens_state, batches, key):
+            members, temps = ens_state["members"], ens_state["temps"]
+            members, losses = vmapped(members, batches, temps)
+            new_temps, n_acc = metropolis_swap_device(
+                losses, temps, ens_state["cycle"], key)
+            return ({"members": members, "temps": new_temps,
+                     "cycle": ens_state["cycle"] + 1},
+                    {"losses": losses, "accepted": n_acc,
+                     "temps": new_temps})
+
+        return jax.jit(cycle, donate_argnums=(0,))
+
+    def run(self, key, *, cycles: int, steps_per_cycle: int,
+            shape: ShapeSpec, data_seed: int = 0) -> Tuple[Any, list]:
+        """Returns (final ensemble state, per-cycle metrics)."""
+        from repro.data import SyntheticLM
+        ens = self.init(key)
+        cyc = self._build_cycle(steps_per_cycle, shape)
+        history = []
+        data = [SyntheticLM(self.cfg, shape, seed=data_seed + i)
+                for i in range(self.n)]
+        step0 = 0
+        for c in range(cycles):
+            batches = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[jax.tree.map(
+                    jnp.asarray,
+                    _stack_steps(data[i], step0, steps_per_cycle))
+                  for i in range(self.n)])
+            key, sub = jax.random.split(key)
+            ens, m = cyc(ens, batches, sub)
+            history.append(jax.device_get(m))
+            step0 += steps_per_cycle
+        return ens, history
+
+
+def _stack_steps(ds, start: int, n: int):
+    batches = [ds.batch_at(start + i) for i in range(n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)

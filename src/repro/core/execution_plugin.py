@@ -1,0 +1,240 @@
+"""Execution plugins (paper §3.2 component 4): bind a pattern's kernels into
+executable units (Tasks) and submit them to the pilot runtime.
+
+One plugin per pattern.  The plugin is the ONLY component that sees both the
+pattern structure and the runtime — patterns stay execution-agnostic, the
+runtime stays pattern-agnostic.  The plugin also assembles the paper's TTC
+decomposition:  TTC = T_EnMD(core+pattern+rts) + T_exec + T_data.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from repro.core.kernel_plugin import Kernel
+from repro.core.patterns import (BagOfTasks, ExecutionPattern, Pipeline,
+                                 ReplicaExchange, SimulationAnalysisLoop)
+from repro.core.resource_handler import Pilot
+from repro.runtime.states import Task, TaskGraph, TaskState
+
+
+@dataclass
+class ExecutionProfile:
+    """Paper eq. (1)-(2)."""
+    ttc: float = 0.0
+    t_exec: float = 0.0
+    t_data: float = 0.0
+    t_core_overhead: float = 0.0
+    t_pattern_overhead: float = 0.0
+    t_rts_overhead: float = 0.0
+    n_tasks: int = 0
+    n_failed: int = 0
+    n_retries: int = 0
+    n_speculative: int = 0
+    utilization: float = 0.0
+    per_stage: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    results: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def t_enmd_overhead(self) -> float:
+        return (self.t_core_overhead + self.t_pattern_overhead
+                + self.t_rts_overhead)
+
+    def summary(self) -> Dict[str, float]:
+        return {"ttc": self.ttc, "t_exec": self.t_exec,
+                "t_data": self.t_data,
+                "t_core_overhead": self.t_core_overhead,
+                "t_pattern_overhead": self.t_pattern_overhead,
+                "t_rts_overhead": self.t_rts_overhead,
+                "n_tasks": self.n_tasks, "n_failed": self.n_failed,
+                "utilization": self.utilization}
+
+
+class BaseExecutionPlugin:
+    def __init__(self, pattern: ExecutionPattern, pilot: Pilot):
+        self.pattern = pattern
+        self.pilot = pilot
+        self.profile = ExecutionProfile()
+        self._kernels: Dict[str, Kernel] = {}
+
+    # ------------------------------------------------------------ helpers
+    def _make_task(self, kernel: Kernel, name: str, *, deps=(), stage="",
+                   instance: int = 0, iteration: int = 0) -> Task:
+        self._kernels[name] = kernel
+
+        def run(task: Task, _k=kernel):
+            ctx = {"pilot": self.pilot, "task": task,
+                   "dep_results": task.meta.get("dep_results", {})}
+            return _k.execute(ctx)
+
+        return Task(
+            name=name,
+            run=run if self.pilot.runtime.mode == "real" else None,
+            duration=(kernel.sim_duration or 0.0),
+            slots=kernel.cores,
+            deps=list(deps),
+            stage=stage, instance=instance, iteration=iteration,
+            idempotent=kernel.idempotent)
+
+    def _run_graph(self, graph: TaskGraph):
+        rp = self.pilot.runtime.run(graph)
+        self.profile.ttc += rp.ttc
+        self.profile.t_exec += rp.t_exec
+        self.profile.t_rts_overhead += rp.t_rts_overhead
+        self.profile.n_tasks += rp.n_tasks
+        self.profile.n_failed += rp.n_failed
+        self.profile.n_retries += rp.n_retries
+        self.profile.n_speculative += rp.n_speculative
+        # data staging time comes from the kernels themselves
+        for name, k in list(self._kernels.items()):
+            if name in graph.tasks:
+                self.profile.t_data += (k.timings["data_in"]
+                                        + k.timings["data_out"])
+        busy = rp.slot_busy
+        denom = max(rp.ttc, 1e-12) * max(self.pilot.slots, 1)
+        self.profile.utilization = busy / denom
+        return rp
+
+    def _stage_stats(self, graph: TaskGraph):
+        for t in graph.tasks.values():
+            st = self.profile.per_stage.setdefault(
+                t.stage, {"n": 0, "t_exec": 0.0})
+            st["n"] += 1
+            if self.pilot.runtime.mode == "sim":
+                st["t_exec"] += t.duration
+            else:
+                st["t_exec"] += max(t.t_finished - t.t_started, 0.0)
+
+    def execute(self) -> ExecutionProfile:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------- pipeline
+
+class PipelineExecutionPlugin(BaseExecutionPlugin):
+    pattern_cls = Pipeline
+
+    def execute(self) -> ExecutionProfile:
+        t0 = time.perf_counter()
+        pat: Pipeline = self.pattern
+        graph = TaskGraph()
+        for p in range(pat.instances):
+            prev = None
+            for s in range(1, pat.stages + 1):
+                k = pat.stage_kernel(s, p)
+                name = f"pipe{p:05d}.stage{s}"
+                graph.add(self._make_task(
+                    k, name, deps=[prev] if prev else [],
+                    stage=f"stage{s}", instance=p))
+                prev = name
+        self.profile.t_pattern_overhead += time.perf_counter() - t0
+        self._run_graph(graph)
+        self._stage_stats(graph)
+        self.profile.results["tasks"] = {
+            n: t.result for n, t in graph.tasks.items()}
+        return self.profile
+
+
+# ---------------------------------------------------------------- replica
+
+class REExecutionPlugin(BaseExecutionPlugin):
+    pattern_cls = ReplicaExchange
+
+    def execute(self) -> ExecutionProfile:
+        pat: ReplicaExchange = self.pattern
+        for c in range(pat.cycles):
+            t0 = time.perf_counter()
+            graph = TaskGraph()
+            sim_names = []
+            for r in pat.replicas:
+                k = pat.prepare_replica_for_md(r)
+                name = f"cycle{c:04d}.md{r.id:05d}"
+                graph.add(self._make_task(k, name, stage="simulation",
+                                          instance=r.id, iteration=c))
+                sim_names.append(name)
+            xk = pat.prepare_exchange(pat.replicas)
+            xname = f"cycle{c:04d}.exchange"
+            graph.add(self._make_task(xk, xname, deps=sim_names,
+                                      stage="exchange", iteration=c))
+            self.profile.t_pattern_overhead += time.perf_counter() - t0
+
+            self._run_graph(graph)
+            self._stage_stats(graph)
+
+            t1 = time.perf_counter()
+            xres = graph.tasks[xname].result
+            pat.apply_exchange(xres, pat.replicas)
+            for r in pat.replicas:
+                r.cycle += 1
+            self.profile.t_pattern_overhead += time.perf_counter() - t1
+            self.profile.results[f"exchange_{c}"] = xres
+        return self.profile
+
+
+# ---------------------------------------------------------------- SAL
+
+class SALExecutionPlugin(BaseExecutionPlugin):
+    pattern_cls = SimulationAnalysisLoop
+
+    def execute(self) -> ExecutionProfile:
+        pat: SimulationAnalysisLoop = self.pattern
+
+        t0 = time.perf_counter()
+        pre = pat.pre_loop()
+        self.profile.t_pattern_overhead += time.perf_counter() - t0
+        if pre is not None:
+            g = TaskGraph()
+            g.add(self._make_task(pre, "pre_loop", stage="pre_loop"))
+            self._run_graph(g)
+            self._stage_stats(g)
+
+        for it in range(pat.maxiterations):
+            t0 = time.perf_counter()
+            graph = TaskGraph()
+            sims = []
+            for i in range(pat.simulation_instances):
+                k = pat.simulation_stage(it, i)
+                name = f"iter{it:04d}.sim{i:05d}"
+                graph.add(self._make_task(k, name, stage="simulation",
+                                          instance=i, iteration=it))
+                sims.append(name)
+            ana = []
+            for j in range(pat.analysis_instances):
+                k = pat.analysis_stage(it, j)
+                name = f"iter{it:04d}.ana{j:05d}"
+                graph.add(self._make_task(k, name, deps=sims,
+                                          stage="analysis", instance=j,
+                                          iteration=it))
+                ana.append(name)
+            self.profile.t_pattern_overhead += time.perf_counter() - t0
+
+            self._run_graph(graph)
+            self._stage_stats(graph)
+
+            results = [graph.tasks[n].result for n in ana]
+            self.profile.results[f"analysis_{it}"] = results
+            if not pat.should_continue(it, results):
+                break
+
+        t0 = time.perf_counter()
+        post = pat.post_loop()
+        self.profile.t_pattern_overhead += time.perf_counter() - t0
+        if post is not None:
+            g = TaskGraph()
+            g.add(self._make_task(post, "post_loop", stage="post_loop"))
+            self._run_graph(g)
+            self._stage_stats(g)
+        return self.profile
+
+
+_PLUGINS = [PipelineExecutionPlugin, REExecutionPlugin, SALExecutionPlugin]
+
+
+def get_plugin(pattern: ExecutionPattern, pilot: Pilot,
+               **kw) -> BaseExecutionPlugin:
+    for cls in _PLUGINS:
+        if isinstance(pattern, cls.pattern_cls):
+            return cls(pattern, pilot, **kw)
+    raise TypeError(f"no execution plugin for {type(pattern).__name__}; "
+                    "register one by appending to _PLUGINS")

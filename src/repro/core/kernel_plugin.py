@@ -1,0 +1,92 @@
+"""Kernel plugins: the paper's task abstraction.
+
+A kernel plugin names a computational tool + its environment and data
+movement, independent of the pattern it runs in.  Plugins register under
+dotted names (the paper's "md.namd", "md.re_exchange" become e.g.
+"lm.train", "re.exchange", "misc.mkfile", "misc.ccount").
+
+Interface (paper listing 2):
+    k = Kernel(name="misc.ccount")
+    k.arguments = {"bytes": 1 << 20}
+    k.upload_input_data = [...]
+    k.download_output_data = [...]
+    k.cores = 1
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+_KERNEL_REGISTRY: Dict[str, "KernelDef"] = {}
+
+
+class KernelDef:
+    def __init__(self, name: str, fn: Callable[..., Any], *,
+                 idempotent: bool = True, description: str = ""):
+        self.name = name
+        self.fn = fn
+        self.idempotent = idempotent
+        self.description = description
+
+
+def register_kernel(name: str, *, idempotent: bool = True,
+                    description: str = ""):
+    def deco(fn):
+        if name in _KERNEL_REGISTRY:
+            raise ValueError(f"kernel {name} already registered")
+        _KERNEL_REGISTRY[name] = KernelDef(name, fn, idempotent=idempotent,
+                                           description=description)
+        return fn
+    return deco
+
+
+def kernel_names() -> List[str]:
+    _ensure_plugins()
+    return sorted(_KERNEL_REGISTRY)
+
+
+def _ensure_plugins():
+    import repro.plugins  # noqa: F401  (registers the standard plugins)
+
+
+class Kernel:
+    """A bound instance of a kernel plugin (one per task)."""
+
+    def __init__(self, name: str):
+        _ensure_plugins()
+        if name not in _KERNEL_REGISTRY:
+            raise KeyError(f"unknown kernel plugin {name!r}; "
+                           f"available: {kernel_names()}")
+        self._def = _KERNEL_REGISTRY[name]
+        self.name = name
+        self.arguments: Dict[str, Any] = {}
+        self.upload_input_data: List[Any] = []
+        self.download_output_data: List[Any] = []
+        self.cores: int = 1
+        self.uses_mpi: bool = False      # multi-chip (submesh-wide) task
+        self.sim_duration: Optional[float] = None   # DES-mode duration
+        self.timings = {"data_in": 0.0, "data_out": 0.0, "exec": 0.0}
+
+    # ------------------------------------------------------------ execute
+    def execute(self, ctx: Optional[Dict[str, Any]] = None) -> Any:
+        """Run the kernel: stage data in, execute, stage data out."""
+        ctx = dict(ctx or {})
+        t0 = time.perf_counter()
+        staged = [u() if callable(u) else u for u in self.upload_input_data]
+        self.timings["data_in"] = time.perf_counter() - t0
+        ctx.setdefault("staged_inputs", staged)
+
+        t1 = time.perf_counter()
+        result = self._def.fn(self.arguments, ctx)
+        self.timings["exec"] = time.perf_counter() - t1
+
+        t2 = time.perf_counter()
+        for d in self.download_output_data:
+            if callable(d):
+                d(result)
+        self.timings["data_out"] = time.perf_counter() - t2
+        return result
+
+    @property
+    def idempotent(self) -> bool:
+        return self._def.idempotent

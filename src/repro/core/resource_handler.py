@@ -1,0 +1,113 @@
+"""Resource handler (paper §3.5.3): pilot-based resource acquisition.
+
+``SingleClusterEnvironment`` keeps the paper's interface (listing 3) —
+resource name, cores, walltime, credentials, database — mapped to the TPU
+fleet: cores -> slots (submeshes of the pilot mesh), database -> journal
+path.  ``allocate`` acquires the pilot once; patterns then run on it with
+application-level scheduling (the whole point of the pilot abstraction).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.runtime.executor import PilotRuntime
+from repro.runtime.journal import Journal
+
+
+@dataclass
+class ResourceSpec:
+    name: str = "local.cpu"
+    cores: int = 4
+    walltime: int = 15                 # minutes
+    username: Optional[str] = None
+    project: Optional[str] = None
+    queue: Optional[str] = None
+    # hardware model used for napkin math / sim calibration
+    peak_flops_per_core: float = 197e12
+    hbm_per_core: float = 16e9
+
+
+class Pilot:
+    """The resource placeholder: holds slots (and the device mesh when the
+    resource is a TPU pod) for application-level task scheduling."""
+
+    def __init__(self, spec: ResourceSpec, runtime: PilotRuntime,
+                 mesh=None):
+        self.spec = spec
+        self.runtime = runtime
+        self.mesh = mesh
+        self.t_allocated = time.perf_counter()
+        self.active = True
+
+    @property
+    def slots(self) -> int:
+        return self.runtime.slots
+
+    def resize(self, slots: int):
+        """Elastic scaling: grow/shrink the slot pool mid-run."""
+        self.runtime.resize(slots)
+
+    def walltime_remaining(self) -> float:
+        return self.spec.walltime * 60 - (time.perf_counter()
+                                          - self.t_allocated)
+
+
+class SingleClusterEnvironment:
+    """Paper listing 3 interface."""
+
+    def __init__(self, resource: str = "local.cpu", cores: int = 4,
+                 walltime: int = 15, username: Optional[str] = None,
+                 project: Optional[str] = None, queue: Optional[str] = None,
+                 database_url: Optional[str] = None,
+                 database_name: str = "enmd",
+                 mode: str = "real",
+                 straggler_factor: float = 0.0,
+                 max_retries: int = 2):
+        self.spec = ResourceSpec(resource, cores, walltime, username,
+                                 project, queue)
+        self.mode = mode
+        self.straggler_factor = straggler_factor
+        self.max_retries = max_retries
+        self.journal_path = (f"{database_url}/{database_name}.jsonl"
+                             if database_url else None)
+        self.pilot: Optional[Pilot] = None
+        self.overheads: Dict[str, float] = {"t_core": 0.0}
+
+    # ------------------------------------------------------------ allocate
+    def allocate(self) -> Pilot:
+        t0 = time.perf_counter()
+        mesh = None
+        if self.spec.name.startswith("tpu.") and len(jax.devices()) > 1:
+            n = min(self.spec.cores, len(jax.devices()))
+            mesh = jax.make_mesh((n,), ("data",),
+                                 devices=jax.devices()[:n])
+        runtime = PilotRuntime(
+            slots=self.spec.cores, mode=self.mode,
+            journal=Journal(self.journal_path),
+            max_retries=self.max_retries,
+            straggler_factor=self.straggler_factor)
+        self.pilot = Pilot(self.spec, runtime, mesh)
+        self.overheads["t_core"] += time.perf_counter() - t0
+        return self.pilot
+
+    # ------------------------------------------------------------ run
+    def run(self, pattern, **kw):
+        if self.pilot is None or not self.pilot.active:
+            raise RuntimeError("allocate() the pilot before run()")
+        from repro.core.execution_plugin import get_plugin
+        plugin = get_plugin(pattern, self.pilot, **kw)
+        profile = plugin.execute()
+        profile.t_core_overhead = self.overheads["t_core"]
+        return profile
+
+    # ------------------------------------------------------------ release
+    def deallocate(self):
+        t0 = time.perf_counter()
+        if self.pilot is not None:
+            self.pilot.runtime.journal.close()
+            self.pilot.active = False
+        self.overheads["t_core"] += time.perf_counter() - t0

@@ -1,0 +1,70 @@
+"""Synthetic data pipeline: deterministic, host-sharded, double-buffered.
+
+Produces LM batches matching ``input_specs`` for an (arch, shape) cell.  On a
+real fleet each host generates only its addressable shard (the generator is
+keyed by (seed, step, host)); here that structure is kept but runs single
+host.  A background thread keeps one batch of lookahead (double buffering) so
+host data generation overlaps device compute.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+class SyntheticLM:
+    def __init__(self, cfg: ModelConfig, shape: ShapeSpec, *, seed: int = 0,
+                 batch_override: Optional[int] = None, shardings=None):
+        self.cfg, self.shape, self.seed = cfg, shape, seed
+        self.B = batch_override or shape.global_batch
+        self.S = shape.seq_len
+        self.shardings = shardings
+
+    def batch_at(self, step: int) -> Dict[str, Any]:
+        rng = np.random.default_rng((self.seed, step))
+        cfg = self.cfg
+        toks = rng.integers(0, cfg.vocab_size,
+                            (self.B, self.S + 1), dtype=np.int32)
+        out = {"tokens": toks[:, :-1],
+               "labels": toks[:, 1:].copy(),
+               "seg_ids": np.zeros((self.B, self.S), np.int32)}
+        if cfg.vision_tokens:
+            out["vision_embeds"] = rng.standard_normal(
+                (self.B, cfg.vision_tokens, cfg.d_model)).astype(np.float32) \
+                .astype(np.dtype("bfloat16") if cfg.dtype == "bfloat16"
+                        else np.float32) * 0.02
+        if cfg.encoder_layers:
+            out["enc_frames"] = (rng.standard_normal(
+                (self.B, cfg.encoder_seq, cfg.d_model)) * 0.02).astype(
+                np.dtype("bfloat16") if cfg.dtype == "bfloat16"
+                else np.float32)
+        if self.shardings is not None:
+            out = {k: jax.device_put(v, self.shardings.get(k))
+                   for k, v in out.items()}
+        return out
+
+    def batches(self, start: int = 0, prefetch: int = 1
+                ) -> Iterator[Dict[str, Any]]:
+        """Double-buffered iterator: generation overlaps consumption."""
+        q: "queue.Queue" = queue.Queue(maxsize=max(prefetch, 1))
+        stop = threading.Event()
+
+        def producer():
+            step = start
+            while not stop.is_set():
+                q.put(self.batch_at(step))
+                step += 1
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        try:
+            while True:
+                yield q.get()
+        finally:
+            stop.set()

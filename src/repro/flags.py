@@ -1,0 +1,38 @@
+"""Global implementation switches.
+
+``impl`` resolution order: explicit argument > environment variable > default.
+On the CPU stand-in backend the default is the XLA-native path; on real TPU
+the Pallas kernels are the default hot path.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_impl(env_var: str) -> str:
+    v = os.environ.get(env_var)
+    if v:
+        return v
+    return "pallas" if on_tpu() else "xla"
+
+
+def attn_impl(override=None) -> str:
+    return override or default_impl("REPRO_ATTN_IMPL")
+
+
+def rglru_impl(override=None) -> str:
+    return override or default_impl("REPRO_RGLRU_IMPL")
+
+
+def mamba_impl(override=None) -> str:
+    return override or default_impl("REPRO_MAMBA_IMPL")
+
+
+def moe_impl(override=None) -> str:
+    return override or default_impl("REPRO_MOE_IMPL")

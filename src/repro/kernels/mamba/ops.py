@@ -1,0 +1,29 @@
+"""Public wrapper for the Mamba selective scan with impl dispatch."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from repro import flags
+from repro.kernels.mamba.ref import selective_scan_ref
+from repro.kernels.mamba.xla import selective_scan_xla, selective_step_xla
+
+
+@partial(jax.jit, static_argnames=("impl", "chunk"))
+def selective_scan(x, dt, A, Bm, C, D, h0, *, impl: Optional[str] = None,
+                   chunk: int = 256):
+    impl = flags.mamba_impl(impl)
+    if impl == "ref":
+        return selective_scan_ref(x, dt, A, Bm, C, D, h0)
+    if impl == "xla":
+        return selective_scan_xla(x, dt, A, Bm, C, D, h0, chunk=chunk)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.mamba.pallas_kernel import selective_scan_pallas
+        return selective_scan_pallas(x, dt, A, Bm, C, D, h0,
+                                     interpret=(impl == "pallas_interpret"))
+    raise ValueError(f"unknown mamba impl {impl!r}")
+
+
+selective_step = jax.jit(selective_step_xla)

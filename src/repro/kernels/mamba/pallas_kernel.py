@@ -1,0 +1,75 @@
+"""Pallas TPU kernel for the Mamba-1 selective scan.
+
+Design (the CUDA kernel's SRAM blocking, rethought for VMEM):
+  grid (B, channel_blocks); the (block_d, N) state lives in VMEM/VREGs across
+  the whole time loop; per step the kernel forms dA/dB on the fly from the
+  (T, block_d) dt/x tiles and the shared (T, N) B/C tiles — the (B, T, d, N)
+  tensors the naive formulation materializes in HBM never exist.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, h0_ref,
+                  y_ref, hlast_ref, *, T):
+    A = A_ref[...].astype(jnp.float32)            # (block_d, N)
+    Dw = D_ref[...].astype(jnp.float32)           # (block_d,)
+    h = h0_ref[0].astype(jnp.float32)             # (block_d, N)
+
+    def body(t, h):
+        xt = x_ref[0, t].astype(jnp.float32)      # (block_d,)
+        dtt = dt_ref[0, t].astype(jnp.float32)    # (block_d,)
+        bt = B_ref[0, t].astype(jnp.float32)      # (N,)
+        ct = C_ref[0, t].astype(jnp.float32)      # (N,)
+        da = jnp.exp(dtt[:, None] * A)            # (block_d, N)
+        db = (dtt * xt)[:, None] * bt[None, :]
+        h = da * h + db
+        y = jnp.sum(h * ct[None, :], axis=1) + Dw * xt
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, T, body, h)
+    hlast_ref[0] = h.astype(hlast_ref.dtype)
+
+
+def selective_scan_pallas(x, dt, A, Bm, C, D, h0, *, block_d: int = 256,
+                          interpret: bool = False):
+    """x, dt: (B,T,d); A: (d,n); Bm, C: (B,T,n); D: (d,); h0: (B,d,n)."""
+    B, T, d = x.shape
+    n = A.shape[1]
+    block_d = min(block_d, d)
+    assert d % block_d == 0, "channel dim must be block-aligned"
+    nd = d // block_d
+
+    kernel = functools.partial(_mamba_kernel, T=T)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(B, nd),
+        in_specs=[
+            pl.BlockSpec((1, T, block_d), lambda b, c: (b, 0, c)),
+            pl.BlockSpec((1, T, block_d), lambda b, c: (b, 0, c)),
+            pl.BlockSpec((block_d, n), lambda b, c: (c, 0)),
+            pl.BlockSpec((1, T, n), lambda b, c: (b, 0, 0)),
+            pl.BlockSpec((1, T, n), lambda b, c: (b, 0, 0)),
+            pl.BlockSpec((block_d,), lambda b, c: (c,)),
+            pl.BlockSpec((1, block_d, n), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, T, block_d), lambda b, c: (b, 0, c)),
+            pl.BlockSpec((1, block_d, n), lambda b, c: (b, c, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, d), x.dtype),
+            jax.ShapeDtypeStruct((B, d, n), h0.dtype),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(x, dt, A, Bm, C, D, h0)
+    return y, h_last

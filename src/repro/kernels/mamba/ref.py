@@ -1,0 +1,35 @@
+"""Oracle for the Mamba-1 selective SSM scan (sequential, materializes
+nothing beyond the running state).
+
+  h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) B_t
+  y_t = C_t . h_t + D * x_t
+
+Shapes: x, dt: (B, T, d);  A: (d, n);  Bm, C: (B, T, n);  D: (d,);
+h0: (B, d, n).  Returns y: (B, T, d) and h_last: (B, d, n).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def selective_scan_ref(x, dt, A, Bm, C, D, h0):
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Df = D.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                       # (B,d) (B,d) (B,n) (B,n)
+        da = jnp.exp(dtt[..., None] * Af[None])     # (B, d, n)
+        db = (dtt * xt)[..., None] * bt[:, None, :] # (B, d, n)
+        h = da * h + db
+        y = jnp.einsum("bdn,bn->bd", h, ct) + Df[None] * xt
+        return h, y
+
+    inps = (xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+            Bf.swapaxes(0, 1), Cf.swapaxes(0, 1))
+    h_last, ys = lax.scan(step, h0.astype(jnp.float32), inps)
+    return ys.swapaxes(0, 1).astype(x.dtype), h_last.astype(h0.dtype)

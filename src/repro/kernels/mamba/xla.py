@@ -1,0 +1,64 @@
+"""XLA-native selective scan: time-chunked associative scan.
+
+The (B, T, d, n) da/db tensors are never materialized for the full T — only
+per chunk — bounding peak memory at O(B * chunk * d * n) (the same insight as
+the CUDA mamba kernel's SRAM blocking, restated for XLA/HBM).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _assoc(l, r):
+    al, bl = l
+    ar, br = r
+    return al * ar, ar * bl + br
+
+
+def selective_scan_xla(x, dt, A, Bm, C, D, h0, *, chunk: int = 256):
+    B, T, d = x.shape
+    n = A.shape[1]
+    chunk = min(chunk, T)
+    if T % chunk:
+        from repro.kernels.mamba.ref import selective_scan_ref
+        return selective_scan_ref(x, dt, A, Bm, C, D, h0)
+    nc = T // chunk
+
+    xf = x.astype(jnp.float32).reshape(B, nc, chunk, d).swapaxes(0, 1)
+    dtf = dt.astype(jnp.float32).reshape(B, nc, chunk, d).swapaxes(0, 1)
+    Bf = Bm.astype(jnp.float32).reshape(B, nc, chunk, n).swapaxes(0, 1)
+    Cf = C.astype(jnp.float32).reshape(B, nc, chunk, n).swapaxes(0, 1)
+    Af = A.astype(jnp.float32)
+    Df = D.astype(jnp.float32)
+
+    def do_chunk(h, inp):
+        xc, dtc, bc, cc = inp                              # (B,Tc,*) each
+        da = jnp.exp(dtc[..., None] * Af[None, None])      # (B,Tc,d,n)
+        db = (dtc * xc)[..., None] * bc[:, :, None, :]     # (B,Tc,d,n)
+        Ap, Bp = lax.associative_scan(_assoc, (da, db), axis=1)
+        hs = Ap * h[:, None] + Bp                          # (B,Tc,d,n)
+        y = jnp.einsum("btdn,btn->btd", hs, cc) + Df[None, None] * xc
+        return hs[:, -1], y
+
+    # NOTE: an inner jax.checkpoint(do_chunk) was measured (dry-run HLO
+    # accounting) to cost slightly MORE traffic than it saves once the block
+    # level remat already recomputes the scan — hypothesis refuted, see
+    # EXPERIMENTS.md §Perf falcon/step 3.
+    h_last, ys = lax.scan(do_chunk, h0.astype(jnp.float32),
+                          (xf, dtf, Bf, Cf))
+    y = ys.swapaxes(0, 1).reshape(B, T, d)
+    return y.astype(x.dtype), h_last.astype(h0.dtype)
+
+
+def selective_step_xla(x, dt, A, Bm, C, D, h0):
+    """Single-token decode step.  x, dt: (B, d); Bm, C: (B, n)."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    da = jnp.exp(dtf[..., None] * A.astype(jnp.float32)[None])
+    db = (dtf * xf)[..., None] * Bm.astype(jnp.float32)[:, None, :]
+    h = da * h0.astype(jnp.float32) + db
+    y = jnp.einsum("bdn,bn->bd", h, C.astype(jnp.float32))
+    y = y + D.astype(jnp.float32)[None] * xf
+    return y.astype(x.dtype), h.astype(h0.dtype)

@@ -1,0 +1,30 @@
+"""Public wrapper for the MoE grouped matmul with impl dispatch.
+
+The XLA path is a plain batched matmul over the capacity layout (computes
+padding rows — wasted FLOPs at low expert load).  The Pallas kernel skips
+row-blocks past each group's size, recovering the padding waste on TPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import flags
+from repro.kernels.moe_gmm.ref import gmm_ref
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def gmm(x, w, group_sizes, *, impl: Optional[str] = None):
+    impl = flags.moe_impl(impl)
+    if impl == "ref":
+        return gmm_ref(x, w, group_sizes)
+    if impl == "xla":
+        return jnp.einsum("ecd,edf->ecf", x, w)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.moe_gmm.pallas_kernel import gmm_pallas
+        return gmm_pallas(x, w, group_sizes,
+                          interpret=(impl == "pallas_interpret"))
+    raise ValueError(f"unknown moe impl {impl!r}")

@@ -1,0 +1,16 @@
+"""Oracle for the capacity-layout grouped matmul (MoE expert FFN).
+
+x: (E, C, D) expert-batched tokens (rows beyond group_sizes[e] are padding),
+w: (E, D, F).  Returns (E, C, F) with padded rows zeroed.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gmm_ref(x, w, group_sizes):
+    E, C, D = x.shape
+    y = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    valid = jnp.arange(C)[None, :] < group_sizes[:, None]
+    return (y * valid[..., None]).astype(x.dtype)

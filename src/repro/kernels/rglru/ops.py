@@ -1,0 +1,26 @@
+"""Public wrapper for the RG-LRU linear scan with impl dispatch."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from repro import flags
+from repro.kernels.rglru.ref import linear_scan_ref
+from repro.kernels.rglru.xla import linear_scan_xla
+
+
+@partial(jax.jit, static_argnames=("impl", "chunk"))
+def linear_scan(x, a, h0, *, impl: Optional[str] = None, chunk: int = 512):
+    """h_t = a_t * h_{t-1} + x_t over axis 1.  x, a: (B,T,C); h0: (B,C)."""
+    impl = flags.rglru_impl(impl)
+    if impl == "ref":
+        return linear_scan_ref(x, a, h0)
+    if impl == "xla":
+        return linear_scan_xla(x, a, h0, chunk=chunk)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.rglru.pallas_kernel import linear_scan_pallas
+        return linear_scan_pallas(x, a, h0,
+                                  interpret=(impl == "pallas_interpret"))
+    raise ValueError(f"unknown rglru impl {impl!r}")

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel for the RG-LRU linear recurrence h_t = a_t h_{t-1} + x_t.
+
+Design: grid (B, channel_blocks); each program holds its (T, block_c) tile of
+x and a in VMEM and walks the time loop with the running state h in VREGs —
+the recurrence is elementwise over channels (VPU work, no MXU), so the tile
+is chosen lane-aligned (block_c multiple of 128).  Gate computation stays in
+XLA (it is dense matmul work the MXU already handles well); the kernel owns
+only the sequential hot loop that XLA would otherwise materialize as a long
+unrolled chain.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(x_ref, a_ref, h0_ref, y_ref, hlast_ref, *, T):
+    h = h0_ref[0].astype(jnp.float32)          # (block_c,)
+
+    def body(t, h):
+        h = a_ref[0, t].astype(jnp.float32) * h \
+            + x_ref[0, t].astype(jnp.float32)
+        y_ref[0, t] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, T, body, h)
+    hlast_ref[0] = h.astype(hlast_ref.dtype)
+
+
+def linear_scan_pallas(x, a, h0, *, block_c: int = 256,
+                       interpret: bool = False):
+    """x, a: (B, T, C); h0: (B, C).  Returns (y, h_last)."""
+    B, T, C = x.shape
+    block_c = min(block_c, C)
+    assert C % block_c == 0, "channel dim must be block-aligned"
+    nc = C // block_c
+
+    kernel = functools.partial(_rglru_kernel, T=T)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, T, block_c), lambda b, c: (b, 0, c)),
+            pl.BlockSpec((1, T, block_c), lambda b, c: (b, 0, c)),
+            pl.BlockSpec((1, block_c), lambda b, c: (b, c)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, T, block_c), lambda b, c: (b, 0, c)),
+            pl.BlockSpec((1, block_c), lambda b, c: (b, c)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, C), x.dtype),
+            jax.ShapeDtypeStruct((B, C), h0.dtype),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(x, a, h0)
+    return y, h_last

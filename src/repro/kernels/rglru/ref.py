@@ -1,0 +1,23 @@
+"""Oracle for the RG-LRU linear recurrence: h_t = a_t * h_{t-1} + x_t.
+
+All per-channel (diagonal) — shapes: x, a: (B, T, C); h0: (B, C).
+Returns (y, h_last) with y[:, t] = h_t.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def linear_scan_ref(x, a, h0):
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, at = inp
+        h = at * h + xt
+        return h, h
+
+    h_last, ys = lax.scan(step, h0.astype(jnp.float32),
+                          (xf.swapaxes(0, 1), af.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(x.dtype), h_last.astype(h0.dtype)

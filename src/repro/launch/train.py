@@ -1,0 +1,102 @@
+"""Production training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b \
+        --shape train_4k --steps 100 --mesh prod [--multi-pod] \
+        --ckpt-dir /ckpts/gemma2
+
+On a real fleet this runs under multi-controller JAX (jax.distributed); on
+this container use --mesh local with a reduced config (--reduced).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.checkpoint import Checkpointer
+from repro.configs import SHAPES, get_config, reduced
+from repro.configs.base import ShapeSpec
+from repro.data import SyntheticLM
+from repro.dist.sharding import batch_shardings, state_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.train import TrainHyper, build_train_step, make_train_state, \
+    train_state_specs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--mesh", choices=("local", "prod"), default="local")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--seq", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    shape = SHAPES[args.shape]
+    if args.batch or args.seq:
+        shape = ShapeSpec("cli", "train", args.seq or shape.seq_len,
+                          args.batch or shape.global_batch)
+
+    mesh = None
+    if args.mesh == "prod":
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    # arch-selected schedule (minicpm ships WSD)
+    schedule = args.schedule
+    if schedule is None:
+        import importlib
+        mod = importlib.import_module(
+            f"repro.configs.{args.arch.replace('-', '_')}")
+        schedule = getattr(mod, "SCHEDULE", "cosine")
+
+    hyper = TrainHyper(base_lr=args.lr, warmup=min(100, args.steps // 10 + 1),
+                       total_steps=args.steps, schedule=schedule)
+    step_fn = build_train_step(cfg, mesh, hyper)
+    if mesh is not None:
+        st_sh = state_shardings(cfg, mesh, train_state_specs(cfg))
+        b_specs = __import__("repro.configs", fromlist=["input_specs"]) \
+            .input_specs(cfg, shape)
+        b_sh = batch_shardings(cfg, mesh, b_specs, "train")
+        step = jax.jit(step_fn, in_shardings=(st_sh, b_sh),
+                       out_shardings=(st_sh, None), donate_argnums=(0,))
+    else:
+        step = jax.jit(step_fn, donate_argnums=(0,))
+        b_sh = None
+
+    state = make_train_state(cfg, jax.random.PRNGKey(0))
+    start = 0
+    ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if ck and ck.latest_step() is not None:
+        state, start = ck.restore(jax.eval_shape(lambda: state))
+        print(f"restored step {start}")
+
+    data = SyntheticLM(cfg, shape, seed=0, shardings=b_sh)
+    t0 = time.time()
+    for i in range(start, args.steps):
+        state, m = step(state, data.batch_at(i))
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss {float(m['loss']):.4f} "
+                  f"lr {float(m['lr']):.2e}", flush=True)
+        if ck and i and i % args.ckpt_every == 0:
+            ck.save(state, i, blocking=False)
+    if ck:
+        ck.save(state, args.steps)
+        ck.wait()
+    steps = args.steps - start
+    print(f"{steps} steps in {time.time()-t0:.1f}s "
+          f"({(time.time()-t0)/max(steps,1):.2f}s/step)")
+
+
+if __name__ == "__main__":
+    main()

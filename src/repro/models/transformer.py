@@ -1,0 +1,474 @@
+"""Composable model definition: parameter init, forward (train/prefill) and
+decode step for every assigned architecture family.
+
+Layer stacks are scanned over *pattern periods*: the scan unit is one full
+cycle of ``cfg.layer_pattern`` (so per-layer attention kinds stay static and
+the chunked attention can prune kv ranges); remainder layers are unrolled in
+``tail``.  Heterogeneous stacks (recurrentgemma) set ``scan_layers=False`` and
+unroll entirely.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain_batch, constrain_logits
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------- init
+
+def _init_block(cfg: ModelConfig, key, kind: str, *, cross: bool = False,
+                enc: bool = False) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {"ln1": L.init_norm(cfg)}
+    if kind in ("global", "local", "enc"):
+        p["attn"] = L.init_attn(cfg, ks[0])
+        if cfg.post_norms:
+            p["ln1_post"] = L.init_norm(cfg)
+        if cross:
+            p["lnx"] = L.init_norm(cfg)
+            p["xattn"] = L.init_attn(cfg, ks[1], cross=True)
+        p["ln2"] = L.init_norm(cfg)
+        if cfg.num_experts and not enc:
+            p["moe"] = L.init_moe(cfg, ks[2])
+        else:
+            p["mlp"] = L.init_mlp(cfg, ks[2])
+        if cfg.post_norms:
+            p["ln2_post"] = L.init_norm(cfg)
+    elif kind == "rec":
+        p["rec"] = L.init_rglru(cfg, ks[0])
+        p["ln2"] = L.init_norm(cfg)
+        p["mlp"] = L.init_mlp(cfg, ks[1])
+    elif kind == "mamba":
+        p["mamba"] = L.init_mamba(cfg, ks[0])
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(period, num_scanned_groups, num_tail_layers)."""
+    period = len(cfg.layer_pattern)
+    if not cfg.scan_layers:
+        return period, 0, cfg.num_layers
+    G = cfg.num_layers // period
+    return period, G, cfg.num_layers - G * period
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    kE, kH, kB, kT, kEnc = jax.random.split(key, 5)
+    D, V = cfg.d_model, cfg.vocab_size
+    params: Params = {
+        "embed": {"tok": L._normal(kE, (V, D), 0.02, L._pd(cfg))},
+        "final_norm": L.init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L._normal(kH, (D, V), 0.02, L._pd(cfg))
+
+    period, G, n_tail = _layout(cfg)
+    cross = cfg.encoder_layers > 0
+
+    def init_group(k):
+        sub = {}
+        for s in range(period):
+            sub[f"sub_{s}"] = _init_block(
+                cfg, jax.random.fold_in(k, s), cfg.layer_pattern[s],
+                cross=cross)
+        return sub
+
+    if G:
+        params["blocks"] = jax.vmap(init_group)(jax.random.split(kB, G))
+    tail = {}
+    for j in range(n_tail):
+        i = G * period + j
+        tail[f"block_{j}"] = _init_block(
+            cfg, jax.random.fold_in(kT, j), cfg.layer_kind(i), cross=cross)
+    if tail:
+        params["tail"] = tail
+
+    if cfg.encoder_layers:
+        def init_enc(k):
+            return {"sub_0": _init_block(cfg, k, "enc", enc=True)}
+        params["enc"] = {
+            "blocks": jax.vmap(init_enc)(
+                jax.random.split(kEnc, cfg.encoder_layers)),
+            "final_norm": L.init_norm(cfg),
+        }
+    return params
+
+
+# ---------------------------------------------------------------- blocks
+
+def forward_block(cfg: ModelConfig, bp: Params, h, kind: str, *, positions,
+                  seg_ids, mem, mesh, cache_len: Optional[int]):
+    """Returns (h, aux, cache_or_None)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    if kind in ("global", "local", "enc"):
+        xin = L.apply_norm(cfg, bp["ln1"], h)
+        if cache_len:
+            a, kv = _attn_with_cache(cfg, bp["attn"], xin, kind=kind,
+                                     positions=positions, seg_ids=seg_ids,
+                                     mesh=mesh, cache_len=cache_len)
+            cache = kv
+        else:
+            a = L.apply_attn(cfg, bp["attn"], xin, kind=kind,
+                             positions=positions, seg_ids=seg_ids, mesh=mesh)
+        if cfg.post_norms:
+            a = L.apply_norm(cfg, bp["ln1_post"], a)
+        h = h + a
+        if "xattn" in bp and mem is not None:
+            xin = L.apply_norm(cfg, bp["lnx"], h)
+            if cache_len:
+                xa, xkv = _cross_with_cache(cfg, bp["xattn"], xin, mem)
+                cache.update(xkv)
+            else:
+                xa = L.apply_attn(cfg, bp["xattn"], xin, kind="cross",
+                                  positions=positions, mem=mem, mesh=mesh)
+            h = h + xa
+        xin = L.apply_norm(cfg, bp["ln2"], h)
+        if "moe" in bp:
+            y, aux = L.apply_moe(cfg, bp["moe"], xin, mesh=mesh)
+        else:
+            y = L.apply_mlp(cfg, bp["mlp"], xin)
+        if cfg.post_norms:
+            y = L.apply_norm(cfg, bp["ln2_post"], y)
+        h = h + y
+    elif kind == "rec":
+        xin = L.apply_norm(cfg, bp["ln1"], h)
+        if cache_len:
+            m, cache = L.apply_rglru(cfg, bp["rec"], xin, mesh=mesh,
+                                     return_state=True)
+        else:
+            m = L.apply_rglru(cfg, bp["rec"], xin, mesh=mesh)
+        h = h + m
+        y = L.apply_mlp(cfg, bp["mlp"], L.apply_norm(cfg, bp["ln2"], h))
+        h = h + y
+    elif kind == "mamba":
+        xin = L.apply_norm(cfg, bp["ln1"], h)
+        if cache_len:
+            m, cache = L.apply_mamba(cfg, bp["mamba"], xin, mesh=mesh,
+                                     return_state=True)
+        else:
+            m = L.apply_mamba(cfg, bp["mamba"], xin, mesh=mesh)
+        h = h + m
+    else:
+        raise ValueError(kind)
+    return h, aux, cache
+
+
+def _attn_with_cache(cfg, p, x, *, kind, positions, seg_ids, mesh, cache_len):
+    """Prefill: compute attention AND return the kv cache (roped keys)."""
+    B, S, _ = x.shape
+    q, k, v = L._qkv(cfg, p, x, positions, kind)
+    causal = kind != "enc"
+    window = cfg.sliding_window if kind == "local" else 0
+    from repro.kernels.flash_attention.ops import flash_attention
+    o = flash_attention(q, k, v, causal=causal, window=window,
+                        softcap=cfg.attn_softcap,
+                        scale=cfg.attn_scale or None,
+                        seg_q=seg_ids, seg_kv=seg_ids)
+    out = o.reshape(B, S, cfg.q_dim) @ L.cast(cfg, p["wo"])
+    if kind == "local" and cfg.sliding_window:
+        W = cfg.sliding_window
+        take = min(W, S)
+        ks, vs = k[:, -take:], v[:, -take:]
+        pos_tail = jnp.arange(S - take, S, dtype=jnp.int32)
+        slots = pos_tail % W
+        kc = jnp.zeros((B, W) + k.shape[2:], k.dtype).at[:, slots].set(ks)
+        vc = jnp.zeros((B, W) + v.shape[2:], v.dtype).at[:, slots].set(vs)
+        pc = jnp.full((W,), -1, jnp.int32).at[slots].set(pos_tail)
+        cache = {"k": kc, "v": vc, "pos": pc}
+    else:
+        pad = cache_len - S
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cache = {"k": kc, "v": vc}
+    return out, cache
+
+
+def _cross_with_cache(cfg, p, x, mem):
+    B, S, _ = x.shape
+    Sm = mem.shape[1]
+    q = (x @ L.cast(cfg, p["wq"])).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = (mem @ L.cast(cfg, p["wk"])).reshape(B, Sm, cfg.num_kv_heads,
+                                             cfg.head_dim)
+    v = (mem @ L.cast(cfg, p["wv"])).reshape(B, Sm, cfg.num_kv_heads,
+                                             cfg.head_dim)
+    from repro.kernels.flash_attention.ops import flash_attention
+    o = flash_attention(q, k, v, causal=False, softcap=cfg.attn_softcap,
+                        scale=cfg.attn_scale or None)
+    out = o.reshape(B, S, cfg.q_dim) @ L.cast(cfg, p["wo"])
+    return out, {"xk": k, "xv": v}
+
+
+def decode_block(cfg: ModelConfig, bp: Params, h, cache: Params, kind: str,
+                 *, positions, mesh):
+    """Single-token step.  h: (B,1,D).  Returns (h, new_cache)."""
+    new_cache = dict(cache)
+    if kind in ("global", "local"):
+        xin = L.apply_norm(cfg, bp["ln1"], h)
+        sub = {k: cache[k] for k in ("k", "v", "pos") if k in cache}
+        a, upd = L.attn_decode(cfg, bp["attn"], xin, sub, positions,
+                               kind=kind, mesh=mesh)
+        new_cache.update(upd)
+        if cfg.post_norms:
+            a = L.apply_norm(cfg, bp["ln1_post"], a)
+        h = h + a
+        if "xattn" in bp and "xk" in cache:
+            xin = L.apply_norm(cfg, bp["lnx"], h)
+            xa = L.attn_decode_cross(cfg, bp["xattn"], xin,
+                                     {"xk": cache["xk"], "xv": cache["xv"]})
+            h = h + xa
+        xin = L.apply_norm(cfg, bp["ln2"], h)
+        if "moe" in bp:
+            y, _ = L.apply_moe(cfg, bp["moe"], xin, mesh=mesh)
+        else:
+            y = L.apply_mlp(cfg, bp["mlp"], xin)
+        if cfg.post_norms:
+            y = L.apply_norm(cfg, bp["ln2_post"], y)
+        h = h + y
+    elif kind == "rec":
+        xin = L.apply_norm(cfg, bp["ln1"], h)
+        m, upd = L.rglru_decode(cfg, bp["rec"], xin,
+                                {"h": cache["h"], "conv": cache["conv"]})
+        new_cache.update(upd)
+        h = h + m
+        h = h + L.apply_mlp(cfg, bp["mlp"], L.apply_norm(cfg, bp["ln2"], h))
+    elif kind == "mamba":
+        xin = L.apply_norm(cfg, bp["ln1"], h)
+        m, upd = L.mamba_decode(cfg, bp["mamba"], xin,
+                                {"h": cache["h"], "conv": cache["conv"]})
+        new_cache.update(upd)
+        h = h + m
+    else:
+        raise ValueError(kind)
+    return h, new_cache
+
+
+# ---------------------------------------------------------------- embed/head
+
+def embed_tokens(cfg: ModelConfig, params: Params, tokens, positions):
+    e = jnp.take(params["embed"]["tok"], tokens, axis=0).astype(L._dt(cfg))
+    if cfg.emb_scale:
+        e = e * jnp.asarray(math.sqrt(cfg.d_model), L._dt(cfg))
+    if cfg.rope_theta == 0:  # absolute sinusoidal positions (whisper)
+        e = e + L.sinusoidal_pos(positions, cfg.d_model).astype(L._dt(cfg))
+    return e
+
+
+def lm_logits(cfg: ModelConfig, params: Params, h, *, mesh=None):
+    """Full logits (serve path; training uses the fused chunked loss)."""
+    w = params["embed"]["tok"] if cfg.tie_embeddings else params["head"]
+    if cfg.tie_embeddings:
+        logits = h.astype(jnp.float32) @ w.astype(jnp.float32).T
+    else:
+        logits = h.astype(jnp.float32) @ w.astype(jnp.float32)
+    logits = constrain_logits(cfg, mesh, logits)
+    if cfg.final_softcap:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    return logits
+
+
+# ---------------------------------------------------------------- encoder
+
+def encode(cfg: ModelConfig, params: Params, enc_frames, *, mesh=None,
+           remat: bool = False, batch_kind: str = "train"):
+    B, S, _ = enc_frames.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h = enc_frames.astype(L._dt(cfg))
+    if cfg.rope_theta == 0:
+        h = h + L.sinusoidal_pos(pos, cfg.d_model).astype(L._dt(cfg))
+    h = constrain_batch(cfg, mesh, h, batch_kind)
+
+    def body(carry, bp):
+        hh = carry
+        hh, _, _ = forward_block(cfg, bp["sub_0"], hh, "enc", positions=pos,
+                                 seg_ids=None, mem=None, mesh=mesh,
+                                 cache_len=None)
+        hh = constrain_batch(cfg, mesh, hh, batch_kind)
+        return hh, None
+
+    if remat:
+        body = jax.checkpoint(body, policy=_remat_policy(cfg))
+    h, _ = lax.scan(body, h, params["enc"]["blocks"])
+    return L.apply_norm(cfg, params["enc"]["final_norm"], h)
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return None  # "full": save nothing
+
+
+# ---------------------------------------------------------------- forward
+
+def forward(cfg: ModelConfig, params: Params, tokens, *, positions=None,
+            seg_ids=None, vision_embeds=None, enc_frames=None, mesh=None,
+            remat: bool = False, cache_len: Optional[int] = None,
+            batch_kind: str = "train"):
+    """Returns dict with h (B,S,D final-normed), aux (scalar), cache (or None).
+
+    ``cache_len``: when set, collect a decode cache (prefill mode); caches
+    for global-attention layers are padded to this length.
+    """
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+    h = embed_tokens(cfg, params, tokens, positions)
+    if vision_embeds is not None and cfg.vision_tokens:
+        vt = vision_embeds.shape[1]
+        h = jnp.concatenate([vision_embeds.astype(h.dtype), h[:, vt:]], 1)
+    h = constrain_batch(cfg, mesh, h, batch_kind)
+    mem = None
+    if enc_frames is not None and cfg.encoder_layers:
+        mem = encode(cfg, params, enc_frames, mesh=mesh, remat=remat,
+                     batch_kind=batch_kind)
+
+    period, G, n_tail = _layout(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    collect = cache_len is not None
+    cache: Params = {}
+
+    if G:
+        def body(carry, bp):
+            hh, ax = carry
+            cg = {}
+            for s in range(period):
+                kind = cfg.layer_pattern[s]
+                hh, a, c = forward_block(cfg, bp[f"sub_{s}"], hh, kind,
+                                         positions=positions, seg_ids=seg_ids,
+                                         mem=mem, mesh=mesh,
+                                         cache_len=cache_len)
+                ax = ax + a
+                hh = constrain_batch(cfg, mesh, hh, batch_kind)
+                if collect:
+                    cg[f"sub_{s}"] = c
+            return (hh, ax), (cg if collect else None)
+
+        if remat:
+            body = jax.checkpoint(body, policy=_remat_policy(cfg))
+        (h, aux), blocks_cache = lax.scan(body, (h, aux), params["blocks"])
+        if collect:
+            cache["blocks"] = blocks_cache
+
+    if n_tail:
+        tail_cache = {}
+        for j in range(n_tail):
+            i = G * period + j
+            kind = cfg.layer_kind(i)
+            blk = lambda hh, bp, kind=kind: forward_block(
+                cfg, bp, hh, kind, positions=positions, seg_ids=seg_ids,
+                mem=mem, mesh=mesh, cache_len=cache_len)
+            if remat:
+                blk = jax.checkpoint(blk, policy=_remat_policy(cfg))
+            h, a, c = blk(h, params["tail"][f"block_{j}"])
+            h = constrain_batch(cfg, mesh, h, batch_kind)
+            aux = aux + a
+            if collect:
+                tail_cache[f"block_{j}"] = c
+        if collect:
+            cache["tail"] = tail_cache
+
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    return {"h": h, "aux": aux, "cache": cache if collect else None}
+
+
+# ---------------------------------------------------------------- decode
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens,
+                positions, *, mesh=None):
+    """One token for the whole batch.  tokens: (B,1); positions: (B,).
+    Returns (logits (B,1,V), new cache)."""
+    B = tokens.shape[0]
+    h = embed_tokens(cfg, params, tokens, positions[:, None])
+    h = constrain_batch(cfg, mesh, h, "serve")
+    period, G, n_tail = _layout(cfg)
+    new_cache: Params = {}
+
+    if G:
+        def body(carry, xs):
+            hh = carry
+            bp, cg = xs
+            ncg = {}
+            for s in range(period):
+                kind = cfg.layer_pattern[s]
+                hh, nc = decode_block(cfg, bp[f"sub_{s}"], hh, cg[f"sub_{s}"],
+                                      kind, positions=positions, mesh=mesh)
+                ncg[f"sub_{s}"] = nc
+            hh = constrain_batch(cfg, mesh, hh, "serve")
+            return hh, ncg
+
+        h, nbc = lax.scan(body, h, (params["blocks"], cache["blocks"]))
+        new_cache["blocks"] = nbc
+
+    if n_tail:
+        nt = {}
+        for j in range(n_tail):
+            i = G * period + j
+            kind = cfg.layer_kind(i)
+            h, nc = decode_block(cfg, params["tail"][f"block_{j}"], h,
+                                 cache["tail"][f"block_{j}"], kind,
+                                 positions=positions, mesh=mesh)
+            nt[f"block_{j}"] = nc
+        new_cache["tail"] = nt
+
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = lm_logits(cfg, params, h, mesh=mesh)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------- cache init
+
+def _block_cache_zeros(cfg: ModelConfig, kind: str, B: int, cache_len: int,
+                       cross: bool):
+    dt = L._dt(cfg)
+    KH, Dh = cfg.num_kv_heads, cfg.head_dim
+    if kind in ("global", "local"):
+        if kind == "local" and cfg.sliding_window:
+            W = min(cfg.sliding_window, cache_len)
+            c = {"k": jnp.zeros((B, W, KH, Dh), dt),
+                 "v": jnp.zeros((B, W, KH, Dh), dt),
+                 "pos": jnp.full((W,), -1, jnp.int32)}
+        else:
+            c = {"k": jnp.zeros((B, cache_len, KH, Dh), dt),
+                 "v": jnp.zeros((B, cache_len, KH, Dh), dt)}
+        if cross:
+            c["xk"] = jnp.zeros((B, cfg.encoder_seq, KH, Dh), dt)
+            c["xv"] = jnp.zeros((B, cfg.encoder_seq, KH, Dh), dt)
+        return c
+    if kind == "rec":
+        W = cfg.lru_width_
+        return {"h": jnp.zeros((B, W), jnp.float32),
+                "conv": jnp.zeros((B, cfg.ssm_conv - 1, W), dt)}
+    if kind == "mamba":
+        return {"h": jnp.zeros((B, cfg.d_inner, cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((B, cfg.ssm_conv - 1, cfg.d_inner), dt)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, B: int, cache_len: int) -> Params:
+    period, G, n_tail = _layout(cfg)
+    cross = cfg.encoder_layers > 0
+    cache: Params = {}
+    if G:
+        def one(_):
+            return {f"sub_{s}": _block_cache_zeros(
+                cfg, cfg.layer_pattern[s], B, cache_len, cross)
+                for s in range(period)}
+        cache["blocks"] = jax.vmap(one)(jnp.arange(G))
+    if n_tail:
+        cache["tail"] = {
+            f"block_{j}": _block_cache_zeros(
+                cfg, cfg.layer_kind(G * period + j), B, cache_len, cross)
+            for j in range(n_tail)}
+    return cache

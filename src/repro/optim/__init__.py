@@ -1,0 +1,7 @@
+from repro.optim.adamw import (  # noqa: F401
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+)
+from repro.optim.schedules import cosine, make_schedule, wsd  # noqa: F401

@@ -1,0 +1,64 @@
+"""AdamW with dtype-configurable moments (bf16 moments for the huge archs —
+halves optimizer-state HBM, the fleet-scale memory trick recorded in
+DESIGN.md).  Master params stay in ``cfg.param_dtype``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+OptState = Dict[str, Any]
+
+
+def adamw_init(params, moment_dtype: str = "float32") -> OptState:
+    md = jnp.dtype(moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, md)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, opt: OptState, params, *, lr, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8, wd: float = 0.1):
+    count = opt["count"] + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = mf / c1
+        vhat = vf / c2
+        step = mhat / (jnp.sqrt(vhat) + eps)
+        # decoupled weight decay (skip 1-D params: norms, biases, gates)
+        if p.ndim >= 2:
+            step = step + wd * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * step
+        return newp.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt["m"])
+    flat_v = tdef.flatten_up_to(opt["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm

@@ -1,0 +1,38 @@
+"""LR schedules: cosine (default) and WSD (warmup-stable-decay, MiniCPM)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup: int):
+    return jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+
+
+def cosine(step, *, base_lr: float, warmup: int, total_steps: int,
+           min_ratio: float = 0.1):
+    w = linear_warmup(step, warmup)
+    t = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+    c = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return base_lr * w * c
+
+
+def wsd(step, *, base_lr: float, warmup: int, total_steps: int,
+        decay_frac: float = 0.1, min_ratio: float = 0.1):
+    """Warmup-Stable-Decay [arXiv:2404.06395]: warmup, long flat stable
+    phase, short (default 10%) exponential-ish decay to min_ratio."""
+    w = linear_warmup(step, warmup)
+    decay_steps = max(int(total_steps * decay_frac), 1)
+    decay_start = total_steps - decay_steps
+    t = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+    d = jnp.where(step < decay_start, 1.0, min_ratio ** t)
+    return base_lr * w * d
+
+
+def make_schedule(name: str, **kw):
+    if name == "cosine":
+        return lambda step: cosine(step, **kw)
+    if name == "wsd":
+        return lambda step: wsd(step, **kw)
+    if name == "constant":
+        return lambda step: kw["base_lr"] * linear_warmup(step, kw.get("warmup", 0))
+    raise ValueError(name)

@@ -1,0 +1,118 @@
+"""LM kernel plugins: the real science workloads of this reproduction.
+
+The paper's MD engines (Amber/Gromacs) become JAX model steps on the
+assigned architectures.  Reduced configs run on CPU; full configs are what
+the dry-run lowers.  Step functions and live train states are cached in
+module stores keyed by (ensemble, member) — the in-memory analogue of the
+paper's staged files.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeSpec
+from repro.core.kernel_plugin import register_kernel
+from repro.data import SyntheticLM
+from repro.train import TrainHyper, build_eval_step, build_train_step, \
+    make_train_state
+
+# live member states (the "staging area"); keyed by (ensemble_id, member_id)
+STATE_STORE: Dict[Tuple[str, int], Any] = {}
+_STEP_CACHE: Dict[Tuple, Any] = {}
+
+
+def resolve_cfg(name: str):
+    if name.startswith("reduced:"):
+        return reduced(get_config(name.split(":", 1)[1]))
+    return get_config(name)
+
+
+def _steps(cfg, kind: str, hyper: TrainHyper = TrainHyper()):
+    key = (cfg.name, kind, hyper)
+    if key not in _STEP_CACHE:
+        if kind == "train":
+            _STEP_CACHE[key] = jax.jit(build_train_step(cfg, hyper=hyper))
+        else:
+            _STEP_CACHE[key] = jax.jit(build_eval_step(cfg))
+    return _STEP_CACHE[key]
+
+
+def _shape(args, cfg) -> ShapeSpec:
+    return ShapeSpec("task", "train",
+                     int(args.get("seq", 64)), int(args.get("batch", 4)))
+
+
+@register_kernel("lm.train", description="train an LM for n steps")
+def lm_train(args, ctx):
+    cfg = resolve_cfg(args.get("arch", "reduced:gemma2-2b"))
+    hyper = TrainHyper(base_lr=float(args.get("lr", 3e-4)), warmup=2,
+                       total_steps=int(args.get("total_steps", 1000)),
+                       schedule=args.get("schedule", "cosine"))
+    sid = (args.get("ensemble", "default"), int(args.get("member", 0)))
+    state = STATE_STORE.get(sid)
+    if state is None:
+        state = make_train_state(
+            cfg, jax.random.PRNGKey(int(args.get("seed", 0)) + sid[1]))
+    step = _steps(cfg, "train", hyper)
+    data = SyntheticLM(cfg, _shape(args, cfg),
+                       seed=int(args.get("data_seed", 0)))
+    start = int(jax.device_get(state["step"]))
+    m = {}
+    for i in range(int(args.get("steps", 2))):
+        state, m = step(state, data.batch_at(start + i))
+    STATE_STORE[sid] = state
+    return {"loss": float(m.get("loss", np.nan)),
+            "step": int(jax.device_get(state["step"])),
+            "member": sid[1]}
+
+
+@register_kernel("lm.eval", description="eval an LM member")
+def lm_eval(args, ctx):
+    cfg = resolve_cfg(args.get("arch", "reduced:gemma2-2b"))
+    sid = (args.get("ensemble", "default"), int(args.get("member", 0)))
+    state = STATE_STORE.get(sid)
+    if state is None:
+        raise RuntimeError(f"no live state for member {sid}")
+    step = _steps(cfg, "eval")
+    data = SyntheticLM(cfg, _shape(args, cfg),
+                       seed=int(args.get("data_seed", 1)))
+    out = step(state["params"], data.batch_at(int(args.get("batch_idx", 0))))
+    return {"loss": float(out["loss"]), "member": sid[1]}
+
+
+@register_kernel("lm.checkpoint", description="checkpoint a member state")
+def lm_checkpoint(args, ctx):
+    from repro.checkpoint import Checkpointer
+    sid = (args.get("ensemble", "default"), int(args.get("member", 0)))
+    state = STATE_STORE[sid]
+    ck = Checkpointer(args["dir"], keep=int(args.get("keep", 2)))
+    path = ck.save(state, int(jax.device_get(state["step"])))
+    return {"path": path}
+
+
+@register_kernel("lm.decode", description="batched greedy decode")
+def lm_decode(args, ctx):
+    from repro.serve import BatchedServer, Request
+    cfg = resolve_cfg(args.get("arch", "reduced:gemma2-2b"))
+    sid = (args.get("ensemble", "default"), int(args.get("member", 0)))
+    state = STATE_STORE.get(sid)
+    if state is None:
+        from repro.models import init_params
+        params = init_params(cfg, jax.random.PRNGKey(0))
+    else:
+        params = state["params"]
+    S0 = int(args.get("prompt_len", 8))
+    B = int(args.get("batch", 2))
+    srv = BatchedServer(cfg, params, batch=B, prompt_len=S0,
+                        max_len=S0 + int(args.get("new_tokens", 4)) + 1)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, S0),
+                    max_new_tokens=int(args.get("new_tokens", 4)))
+            for i in range(int(args.get("requests", 2)))]
+    srv.submit(reqs)
+    done = srv.run()
+    return {"served": len(done), "stats": srv.stats}

@@ -1,0 +1,62 @@
+"""Replica-exchange kernels: the paper's Amber temperature-exchange analogue.
+
+Members train at different "temperatures" (learning rates).  The exchange
+kernel gathers member losses and proposes even/odd neighbor swaps with a
+Metropolis criterion — the standard parallel-tempering move applied to the
+hyperparameter dimension (population-based training, RE-style).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import numpy as np
+
+from repro.core.kernel_plugin import register_kernel
+from repro.plugins.lm import STATE_STORE
+
+
+def metropolis_swaps(losses, temps, cycle: int, seed: int = 0):
+    """Even/odd neighbor swap proposals on a 1-D replica chain.
+
+    Returns (new_temps, accepted_pairs).  Energies = losses; acceptance
+    p = min(1, exp((E_i - E_j) * (1/T_i - 1/T_j))).
+    """
+    losses = np.asarray(losses, dtype=np.float64)
+    temps = np.asarray(temps, dtype=np.float64).copy()
+    n = len(losses)
+    rng = np.random.default_rng((seed, cycle))
+    accepted = []
+    start = cycle % 2
+    for i in range(start, n - 1, 2):
+        j = i + 1
+        d = (losses[i] - losses[j]) * (1.0 / temps[i] - 1.0 / temps[j])
+        if math.log(max(rng.random(), 1e-12)) < d:
+            temps[i], temps[j] = temps[j], temps[i]
+            accepted.append((i, j))
+    return temps, accepted
+
+
+@register_kernel("re.exchange",
+                 description="Metropolis temperature exchange over members")
+def re_exchange(args, ctx):
+    ens = args.get("ensemble", "default")
+    n = int(args["replicas"])
+    cycle = int(args.get("cycle", 0))
+    temps = list(map(float, args["temps"]))
+    losses = [None] * n
+    # primary source: the simulation tasks this exchange depends on
+    for res in (ctx.get("dep_results") or {}).values():
+        if isinstance(res, dict) and "member" in res and "loss" in res:
+            losses[int(res["member"])] = float(res["loss"])
+    explicit = args.get("losses")
+    for i in range(n):
+        if losses[i] is None and explicit is not None \
+                and explicit[i] is not None:
+            losses[i] = float(explicit[i])
+        if losses[i] is None:
+            losses[i] = float("nan")
+    new_temps, accepted = metropolis_swaps(losses, temps, cycle,
+                                           int(args.get("seed", 0)))
+    return {"temps": [float(t) for t in new_temps],
+            "accepted": accepted, "losses": losses, "cycle": cycle}

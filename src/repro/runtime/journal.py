@@ -1,0 +1,66 @@
+"""Persistent task-state journal (the MongoDB analogue, per DESIGN.md §2).
+
+Append-only JSONL of task transitions.  On restart, ``replay`` marks DONE
+tasks so the executor skips re-running them — this is the checkpoint/restart
+path for pattern state (model state itself is checkpointed by
+repro.checkpoint at the kernel level).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Optional
+
+from repro.runtime.states import TaskGraph, TaskState
+
+
+class Journal:
+    def __init__(self, path: Optional[str]):
+        self.path = path
+        self._fh = None
+        if path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            self._fh = open(path, "a", buffering=1)
+
+    def record(self, task, event: str, **extra):
+        if self._fh is None:
+            return
+        rec = {"t": time.time(), "task": task.name, "event": event,
+               "state": task.state.value, "attempts": task.attempts}
+        if task.error:
+            rec["error"] = task.error
+        rec.update(extra)
+        self._fh.write(json.dumps(rec, default=str) + "\n")
+
+    def close(self):
+        if self._fh:
+            self._fh.close()
+            self._fh = None
+
+    # -------------------------------------------------------------- replay
+    def replay(self, graph: TaskGraph) -> int:
+        """Mark tasks recorded DONE as done; returns #skipped."""
+        if not self.path or not os.path.exists(self.path):
+            return 0
+        done = set()
+        results: Dict[str, object] = {}
+        with open(self.path) as f:
+            for line in f:
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue  # torn write at crash: ignore
+                if rec.get("event") == "finished" and \
+                        rec.get("state") == "DONE":
+                    done.add(rec["task"])
+                    if "result" in rec:
+                        results[rec["task"]] = rec["result"]
+        n = 0
+        for name in done:
+            t = graph.tasks.get(name)
+            if t is not None and not t.state.terminal:
+                t.state = TaskState.DONE
+                t.result = results.get(name, t.result)
+                n += 1
+        return n

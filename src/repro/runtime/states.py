@@ -1,0 +1,103 @@
+"""Task model: states, tasks, task graphs (the IR all patterns compile to)."""
+from __future__ import annotations
+
+import enum
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+
+class TaskState(str, enum.Enum):
+    NEW = "NEW"
+    SCHEDULED = "SCHEDULED"
+    RUNNING = "RUNNING"
+    DONE = "DONE"
+    FAILED = "FAILED"
+    CANCELED = "CANCELED"
+
+    @property
+    def terminal(self) -> bool:
+        return self in (TaskState.DONE, TaskState.FAILED, TaskState.CANCELED)
+
+
+_tid_counter = itertools.count()
+
+
+@dataclass
+class Task:
+    """One executable unit (the paper's task, produced from a kernel plugin).
+
+    ``duration``: simulated execution seconds (DES mode); ``run``: callable
+    executed in real mode.  ``slots``: resource width (paper's "cores").
+    """
+    name: str
+    run: Optional[Callable[["Task"], Any]] = None
+    duration: float = 0.0
+    slots: int = 1
+    deps: List[str] = field(default_factory=list)
+    stage: str = ""
+    instance: int = 0
+    iteration: int = 0
+    idempotent: bool = True       # eligible for speculative re-execution
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    tid: str = field(default_factory=lambda: f"t{next(_tid_counter):06d}")
+    state: TaskState = TaskState.NEW
+    attempts: int = 0
+    result: Any = None
+    error: Optional[str] = None
+    # timestamps (real clock for overheads; virtual clock for sim TTC)
+    t_created: float = field(default_factory=time.perf_counter)
+    t_scheduled: float = 0.0
+    t_started: float = 0.0
+    t_finished: float = 0.0
+    v_started: float = 0.0
+    v_finished: float = 0.0
+    speculative_of: Optional[str] = None
+
+
+@dataclass
+class TaskGraph:
+    tasks: Dict[str, Task] = field(default_factory=dict)
+
+    def add(self, task: Task) -> Task:
+        if task.name in self.tasks:
+            raise ValueError(f"duplicate task {task.name}")
+        self.tasks[task.name] = task
+        return task
+
+    def __len__(self):
+        return len(self.tasks)
+
+    def validate(self):
+        for t in self.tasks.values():
+            for d in t.deps:
+                if d not in self.tasks:
+                    raise ValueError(f"{t.name}: unknown dep {d}")
+        # cycle check (Kahn)
+        indeg = {n: len(t.deps) for n, t in self.tasks.items()}
+        out: Dict[str, List[str]] = {n: [] for n in self.tasks}
+        for n, t in self.tasks.items():
+            for d in t.deps:
+                out[d].append(n)
+        q = [n for n, k in indeg.items() if k == 0]
+        seen = 0
+        while q:
+            n = q.pop()
+            seen += 1
+            for m in out[n]:
+                indeg[m] -= 1
+                if indeg[m] == 0:
+                    q.append(m)
+        if seen != len(self.tasks):
+            raise ValueError("task graph has a cycle")
+
+    def ready(self) -> List[Task]:
+        return [t for t in self.tasks.values()
+                if t.state == TaskState.NEW
+                and all(self.tasks[d].state == TaskState.DONE
+                        for d in t.deps)]
+
+    def done(self) -> bool:
+        return all(t.state.terminal for t in self.tasks.values())

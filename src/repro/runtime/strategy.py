@@ -1,0 +1,41 @@
+"""Adaptive execution strategies — the paper's §5 future work ("transition
+from static workload-resource mapping to adaptive mapping", Ref [41]):
+time-ordered resource decisions driven by observed workload state.
+
+``AdaptiveSlotStrategy`` watches per-phase utilization and resizes the pilot
+between pattern phases: shrink when slots idle (freeing allocation for other
+pilots), grow up to a cap when the ready backlog would overflow the current
+width.  It plugs into any pattern run as a callback."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.resource_handler import Pilot
+
+
+@dataclass
+class AdaptiveSlotStrategy:
+    min_slots: int
+    max_slots: int
+    target_utilization: float = 0.85
+    grow_factor: float = 2.0
+
+    def decide(self, *, utilization: float, backlog: int,
+               slots: int) -> int:
+        """Return the slot count for the next phase."""
+        if backlog > slots and utilization >= self.target_utilization:
+            want = min(int(slots * self.grow_factor), self.max_slots,
+                       max(backlog, slots))
+        elif utilization < self.target_utilization / 2:
+            want = max(self.min_slots, slots // 2)
+        else:
+            want = slots
+        return max(self.min_slots, min(want, self.max_slots))
+
+    def apply(self, pilot: Pilot, *, utilization: float, backlog: int) -> int:
+        want = self.decide(utilization=utilization, backlog=backlog,
+                           slots=pilot.slots)
+        if want != pilot.slots:
+            pilot.resize(want)
+        return want

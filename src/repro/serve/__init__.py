@@ -1,0 +1,7 @@
+from repro.serve.engine import (  # noqa: F401
+    BatchedServer,
+    Request,
+    build_prefill_step,
+    build_serve_step,
+    cache_specs,
+)

@@ -1,0 +1,107 @@
+"""Serving substrate: prefill/decode step builders, cache specs, and a
+host-side batched-request scheduler (continuous-batching-lite) used by the
+serving example and the ensemble serving plugins.
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, forward, init_cache, lm_logits
+
+
+def build_prefill_step(cfg: ModelConfig, mesh=None,
+                       cache_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        out = forward(cfg, params, batch["tokens"],
+                      vision_embeds=batch.get("vision_embeds"),
+                      enc_frames=batch.get("enc_frames"),
+                      mesh=mesh, cache_len=cache_len, batch_kind="serve")
+        logits = lm_logits(cfg, params, out["h"][:, -1:], mesh=mesh)
+        if cache_len is None:
+            return {"logits": logits}
+        return {"logits": logits, "cache": out["cache"]}
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig, mesh=None):
+    """decode: one new token for the whole batch against the cache."""
+    def serve_step(params, cache, tokens, positions):
+        return decode_step(cfg, params, cache, tokens, positions, mesh=mesh)
+    return serve_step
+
+
+def cache_specs(cfg: ModelConfig, B: int, cache_len: int):
+    """ShapeDtypeStructs of the decode cache (no allocation)."""
+    return jax.eval_shape(lambda: init_cache(cfg, B, cache_len))
+
+
+# ---------------------------------------------------------------- requests
+
+@dataclass
+class Request:
+    rid: int
+    prompt: Any                      # token array (S,)
+    max_new_tokens: int = 16
+    out_tokens: List[int] = field(default_factory=list)
+    submitted_at: float = 0.0
+    done_at: float = 0.0
+
+
+class BatchedServer:
+    """Host-side batched serving loop over fixed-size decode slots.
+
+    Greedy decoding over synchronized batch positions (slot-parallel).  This
+    is the serving driver used by examples/serve_batched.py; the ensemble
+    layer schedules *many* of these as tasks.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, batch: int, prompt_len: int,
+                 max_len: int, mesh=None):
+        self.cfg, self.params, self.mesh = cfg, params, mesh
+        self.B, self.S0, self.Smax = batch, prompt_len, max_len
+        self.prefill = jax.jit(build_prefill_step(cfg, mesh, cache_len=max_len))
+        self.step = jax.jit(build_serve_step(cfg, mesh))
+        self.queue: collections.deque = collections.deque()
+        self.stats = {"served": 0, "decode_steps": 0, "prefills": 0}
+
+    def submit(self, reqs: List[Request]):
+        for r in reqs:
+            r.submitted_at = time.perf_counter()
+            self.queue.append(r)
+
+    def run(self) -> List[Request]:
+        done: List[Request] = []
+        while self.queue:
+            wave = [self.queue.popleft()
+                    for _ in range(min(self.B, len(self.queue)))]
+            tokens = jnp.stack(
+                [jnp.asarray(r.prompt[:self.S0]) for r in wave] +
+                [jnp.zeros((self.S0,), jnp.int32)] * (self.B - len(wave)))
+            out = self.prefill(self.params, {"tokens": tokens})
+            self.stats["prefills"] += 1
+            cache = out["cache"]
+            last = jnp.argmax(out["logits"][:, 0], axis=-1)
+            nsteps = max(r.max_new_tokens for r in wave)
+            for t in range(nsteps):
+                pos = jnp.full((self.B,), self.S0 + t, jnp.int32)
+                logits, cache = self.step(self.params, cache,
+                                          last[:, None], pos)
+                last = jnp.argmax(logits[:, 0], axis=-1)
+                self.stats["decode_steps"] += 1
+                host = jax.device_get(last)
+                for i, r in enumerate(wave):
+                    if t < r.max_new_tokens:
+                        r.out_tokens.append(int(host[i]))
+            for r in wave:
+                r.done_at = time.perf_counter()
+            done.extend(wave)
+            self.stats["served"] += len(wave)
+        return done

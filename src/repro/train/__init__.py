@@ -1,0 +1,8 @@
+from repro.train.losses import chunked_softmax_xent  # noqa: F401
+from repro.train.step import (  # noqa: F401
+    TrainHyper,
+    build_eval_step,
+    build_train_step,
+    make_train_state,
+    train_state_specs,
+)

@@ -1,0 +1,75 @@
+"""Fused LM-head + softmax cross-entropy, chunked over the sequence.
+
+The (B, S, V) logits tensor is never materialized: logits are computed per
+seq-chunk in float32 from the final hidden states and reduced immediately.
+With the vocab-parallel embedding (V sharded over "model") the per-chunk
+logits stay sharded and the reductions are small GSPMD all-reduces.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain_logits
+
+
+def _head_weight(cfg: ModelConfig, params):
+    if cfg.tie_embeddings:
+        return params["embed"]["tok"], True      # (V, D), transpose at use
+    return params["head"], False                 # (D, V)
+
+
+def chunked_softmax_xent(cfg: ModelConfig, params, h, labels, *, mesh=None
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """h: (B, S, D) final-normed; labels: (B, S) (-1 = masked).
+    Returns (mean nll, token count)."""
+    B, S, D = h.shape
+    V = cfg.vocab_size
+    w, transpose = _head_weight(cfg, params)
+    wf = w.astype(jnp.float32)
+    if mesh is not None:
+        # vocab-parallel loss needs "model" free: reshard batch from the
+        # (possibly fsdp-flat) training layout to ("pod","data") once, in
+        # bf16, before the chunk scan.
+        ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        h = jax.lax.with_sharding_constraint(
+            h, NamedSharding(mesh, P(ba, None, None)))
+        labels = jax.lax.with_sharding_constraint(
+            labels, NamedSharding(mesh, P(ba, None)))
+    chunk = cfg.loss_chunk if (cfg.loss_chunk and S % cfg.loss_chunk == 0) \
+        else S
+    nc = S // chunk
+    hs = h.reshape(B, nc, chunk, D).swapaxes(0, 1)      # (nc, B, c, D)
+    ls = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    vocab_ids = jnp.arange(V, dtype=jnp.int32)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hc, lc = xs
+        logits = hc.astype(jnp.float32) @ (wf.T if transpose else wf)
+        logits = constrain_logits(cfg, mesh, logits)
+        if cfg.final_softcap:
+            logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+        m = jnp.max(logits, axis=-1)
+        lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+        eq = lc[..., None] == vocab_ids[None, None, :]
+        corr = jnp.sum(jnp.where(eq, logits, 0.0), axis=-1)
+        mask = (lc >= 0).astype(jnp.float32)
+        nll = (lse - corr) * mask
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mask)), None
+
+    # checkpoint: recompute per-chunk logits in the backward pass instead of
+    # saving (nc, B, c, V) residuals (flash-style fused head+loss)
+    (tot, cnt), _ = lax.scan(
+        jax.checkpoint(body),
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs, ls))
+    return tot / jnp.maximum(cnt, 1.0), cnt

@@ -1,0 +1,145 @@
+"""Train-state + train-step builder: remat, gradient-accumulation
+microbatching (lax.scan), global-norm clipping, AdamW, LR schedules.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import forward, init_params
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         make_schedule)
+from repro.train.losses import chunked_softmax_xent
+
+TrainState = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class TrainHyper:
+    base_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"
+    wd: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    clip: float = 1.0
+    aux_weight: float = 0.01
+
+
+def make_train_state(cfg: ModelConfig, key) -> TrainState:
+    params = init_params(cfg, key)
+    return {"params": params,
+            "opt": adamw_init(params, cfg.optstate_dtype),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_state_specs(cfg: ModelConfig, key=None):
+    """ShapeDtypeStructs of the train state (no allocation)."""
+    k = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda: make_train_state(cfg, k))
+
+
+def compute_cast(cfg: ModelConfig, params):
+    """Cast large matmul weights to the compute dtype on their *sharded*
+    storage, so FSDP all-gathers move bf16 instead of f32 master bytes
+    (halves gather traffic; EXPERIMENTS.md §Perf grok/step 1).  Small and
+    1-D leaves (norms, gates, A_log, dt_bias) stay in master precision.
+    MoE subtrees are excluded: converting params feeding the expert
+    shard_map trips an XLA SPMD-partitioner CHECK ("invalid binary
+    instruction opcode copy"); experts are cast inside the shard_map."""
+    if cfg.dtype != "bfloat16":
+        return params
+
+    def one(path, p):
+        names = tuple(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path)
+        if "moe" in names:
+            return p
+        if (p.ndim >= 2 and p.size > 1_000_000
+                and p.dtype == jnp.float32):
+            return p.astype(jnp.bfloat16)
+        return p
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def build_train_step(cfg: ModelConfig, mesh=None,
+                     hyper: TrainHyper = TrainHyper()):
+    sched = make_schedule(hyper.schedule, base_lr=hyper.base_lr,
+                          warmup=hyper.warmup, total_steps=hyper.total_steps)
+    remat = cfg.remat != "none"
+
+    def loss_fn(params, mb):
+        params = compute_cast(cfg, params)
+        out = forward(cfg, params, mb["tokens"],
+                      seg_ids=mb.get("seg_ids"),
+                      vision_embeds=mb.get("vision_embeds"),
+                      enc_frames=mb.get("enc_frames"),
+                      mesh=mesh, remat=remat)
+        loss, ntok = chunked_softmax_xent(cfg, params, out["h"],
+                                          mb["labels"], mesh=mesh)
+        total = loss + hyper.aux_weight * out["aux"]
+        return total, {"loss": loss, "aux": out["aux"], "ntok": ntok}
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    from repro.dist.sharding import constrain_like_params
+
+    def train_step(state: TrainState, batch) -> tuple:
+        params = state["params"]
+        nmb = cfg.microbatches
+        if nmb > 1:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((nmb, x.shape[0] // nmb) + x.shape[1:]),
+                batch)
+
+            def body(acc, mb):
+                (l, aux), g = grad_fn(params, mb)
+                acc = jax.tree.map(jnp.add, acc,
+                                   {"g": g, "loss": l, "aux": aux["aux"]})
+                return acc, None
+
+            zero = {"g": jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                    "loss": jnp.zeros((), jnp.float32),
+                    "aux": jnp.zeros((), jnp.float32)}
+            acc, _ = lax.scan(body, zero, mbs)
+            grads = constrain_like_params(
+                cfg, mesh, jax.tree.map(lambda g: g / nmb, acc["g"]))
+            loss = acc["loss"] / nmb
+            auxl = acc["aux"] / nmb
+        else:
+            (loss, auxd), grads = grad_fn(params, batch)
+            grads = constrain_like_params(cfg, mesh, grads)
+            auxl = auxd["aux"]
+
+        grads, gnorm = clip_by_global_norm(grads, hyper.clip)
+        lr = sched(state["step"])
+        new_params, new_opt = adamw_update(
+            grads, state["opt"], params, lr=lr, b1=hyper.b1, b2=hyper.b2,
+            wd=hyper.wd)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, "aux": auxl, "grad_norm": gnorm, "lr": lr}
+        return new_state, metrics
+
+    return train_step
+
+
+def build_eval_step(cfg: ModelConfig, mesh=None):
+    def eval_step(params, batch):
+        out = forward(cfg, params, batch["tokens"],
+                      seg_ids=batch.get("seg_ids"),
+                      vision_embeds=batch.get("vision_embeds"),
+                      enc_frames=batch.get("enc_frames"),
+                      mesh=mesh, remat=False)
+        loss, ntok = chunked_softmax_xent(cfg, params, out["h"],
+                                          batch["labels"], mesh=mesh)
+        return {"loss": loss, "ntok": ntok}
+    return eval_step

@@ -1,0 +1,11 @@
+import os
+
+# Tests run on the single real CPU device — the 512-device stand-in is set
+# ONLY inside repro.launch.dryrun (see system design). Assert nobody leaked it.
+assert "xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", ""), \
+    "tests must not run with forced host device count"
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

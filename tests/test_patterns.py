@@ -1,0 +1,155 @@
+"""Pattern semantics: exact ordering constraints per pattern (paper §3.4)."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (BagOfTasks, Kernel, Pipeline, ReplicaExchange,
+                        SimulationAnalysisLoop, SingleClusterEnvironment,
+                        register_kernel)
+
+EVENTS = []
+_LOCK = threading.Lock()
+
+
+@register_kernel("test.trace", description="record execution order")
+def trace_kernel(args, ctx):
+    with _LOCK:
+        EVENTS.append((args["tag"], time.perf_counter()))
+    return {"tag": args["tag"]}
+
+
+def _trace(tag):
+    k = Kernel("test.trace")
+    k.arguments = {"tag": tag}
+    return k
+
+
+def _run(pattern, cores=8, **kw):
+    cl = SingleClusterEnvironment(cores=cores, **kw)
+    cl.allocate()
+    prof = cl.run(pattern)
+    cl.deallocate()
+    return prof
+
+
+def setup_function(fn):
+    EVENTS.clear()
+
+
+def test_pipeline_stage_ordering():
+    class P(Pipeline):
+        def stage_1(self, i):
+            return _trace(("s1", i))
+
+        def stage_2(self, i):
+            return _trace(("s2", i))
+
+    prof = _run(P(stages=2, instances=6))
+    assert prof.n_failed == 0
+    t = {tag: ts for tag, ts in EVENTS}
+    for i in range(6):
+        assert t[("s1", i)] <= t[("s2", i)], "stage i precedes i+1 per pipe"
+
+
+def test_pipes_are_independent():
+    """A slow pipe must not block other pipes' later stages."""
+    class P(Pipeline):
+        def stage_1(self, i):
+            if i == 0:
+                k = Kernel("synthetic.sleep")
+                k.arguments = {"seconds": 0.3}
+                return k
+            return _trace(("s1", i))
+
+        def stage_2(self, i):
+            return _trace(("s2", i))
+
+    _run(P(stages=2, instances=3), cores=3)
+    done_tags = [tag for tag, _ in EVENTS]
+    assert ("s2", 1) in done_tags and ("s2", 2) in done_tags
+
+
+def test_re_exchange_is_barrier():
+    class RE(ReplicaExchange):
+        def prepare_replica_for_md(self, r):
+            return _trace(("md", r.id, r.cycle))
+
+        def prepare_exchange(self, replicas):
+            return _trace(("x", replicas[0].cycle))
+
+    prof = _run(RE(cycles=2, replicas=4))
+    assert prof.n_failed == 0
+    t = {tag: ts for tag, ts in EVENTS}
+    for c in range(2):
+        for r in range(4):
+            assert t[("md", r, c)] <= t[("x", c)], "exchange after all sims"
+    for r in range(4):
+        assert t[("x", 0)] <= t[("md", r, 1)], "next cycle after exchange"
+
+
+def test_re_replica_cycle_advances():
+    seen = []
+
+    class RE(ReplicaExchange):
+        def prepare_replica_for_md(self, r):
+            seen.append((r.id, r.cycle))
+            return _trace(("md", r.id, r.cycle))
+
+        def prepare_exchange(self, replicas):
+            return _trace(("x", replicas[0].cycle))
+
+    _run(RE(cycles=3, replicas=2))
+    assert sorted(seen) == [(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2)]
+
+
+def test_sal_phases_and_convergence():
+    class SAL(SimulationAnalysisLoop):
+        def pre_loop(self):
+            return _trace(("pre",))
+
+        def simulation_stage(self, it, i):
+            return _trace(("sim", it, i))
+
+        def analysis_stage(self, it, j):
+            return _trace(("ana", it, j))
+
+        def post_loop(self):
+            return _trace(("post",))
+
+        def should_continue(self, it, results):
+            return it < 1      # stop after 2 iterations (0, 1)
+
+    prof = _run(SAL(maxiterations=5, simulation_instances=3,
+                    analysis_instances=2))
+    assert prof.n_failed == 0
+    t = {tag: ts for tag, ts in EVENTS}
+    iters = {tag[1] for tag, _ in EVENTS if tag[0] == "sim"}
+    assert iters == {0, 1}, "convergence hook stopped the loop"
+    for it in range(2):
+        for i in range(3):
+            for j in range(2):
+                assert t[("sim", it, i)] <= t[("ana", it, j)]
+    assert t[("pre",)] <= min(ts for tag, ts in EVENTS if tag[0] == "sim")
+    assert t[("post",)] >= max(ts for tag, ts in EVENTS if tag[0] == "ana")
+
+
+def test_bag_of_tasks():
+    class B(BagOfTasks):
+        def task(self, i):
+            return _trace(("t", i))
+
+    prof = _run(B(instances=5))
+    assert prof.n_failed == 0
+    assert len([1 for tag, _ in EVENTS if tag[0] == "t"]) == 5
+
+
+def test_pattern_overhead_accounted():
+    class B(BagOfTasks):
+        def task(self, i):
+            return _trace(("t", i))
+
+    prof = _run(B(instances=10))
+    assert prof.t_pattern_overhead > 0
+    assert prof.t_rts_overhead > 0
+    assert prof.n_tasks == 10

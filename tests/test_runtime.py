@@ -1,0 +1,159 @@
+"""Runtime/scheduler invariants: unit tests + hypothesis property tests."""
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.runtime.executor import PilotRuntime
+from repro.runtime.journal import Journal
+from repro.runtime.states import Task, TaskGraph, TaskState
+
+
+def _graph(durations, deps=None, slots=None):
+    g = TaskGraph()
+    for i, d in enumerate(durations):
+        g.add(Task(name=f"t{i}", duration=float(d),
+                   deps=[f"t{j}" for j in (deps or {}).get(i, [])],
+                   slots=(slots or {}).get(i, 1), stage="s"))
+    return g
+
+
+# ---------------------------------------------------------------- property
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_sim_scheduler_invariants(data):
+    n = data.draw(st.integers(1, 24))
+    slots = data.draw(st.integers(1, 8))
+    durations = data.draw(st.lists(
+        st.floats(0.0, 100.0, allow_nan=False), min_size=n, max_size=n))
+    # random acyclic deps: edges only to earlier tasks
+    deps = {}
+    for i in range(n):
+        if i and data.draw(st.booleans()):
+            k = data.draw(st.integers(1, min(i, 3)))
+            deps[i] = list(np.random.default_rng(i).choice(i, k, False))
+    g = _graph(durations, deps)
+    rt = PilotRuntime(slots=slots, mode="sim")
+    prof = rt.run(g)
+
+    # all tasks reach a terminal state, none failed (no failure injection)
+    assert all(t.state == TaskState.DONE for t in g.tasks.values())
+    # makespan bounds: >= critical path, <= serial sum (+eps)
+    total = sum(durations)
+    # critical path lower bound
+    cp = {}
+    for i in range(n):
+        cp[i] = durations[i] + max((cp[j] for j in deps.get(i, [])),
+                                   default=0.0)
+    assert prof.ttc >= max(cp.values()) - 1e-6
+    assert prof.ttc <= total + 1e-6
+    # never oversubscribed: with 1-slot tasks, ttc >= total/slots
+    assert prof.ttc >= total / slots - 1e-6
+    # dependency order respected
+    for i, t in enumerate(g.tasks.values()):
+        for d in t.deps:
+            assert g.tasks[d].v_finished <= t.v_started + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 30), st.integers(1, 6))
+def test_sim_bag_exact_makespan(n, slots):
+    g = _graph([10.0] * n)
+    prof = PilotRuntime(slots=slots, mode="sim").run(g)
+    assert abs(prof.ttc - 10.0 * int(np.ceil(n / slots))) < 1e-9
+
+
+# ---------------------------------------------------------------- unit
+
+def test_real_mode_runs_callables():
+    calls = []
+    g = TaskGraph()
+    g.add(Task(name="a", run=lambda t: calls.append("a") or 1))
+    g.add(Task(name="b", deps=["a"], run=lambda t: calls.append("b") or 2))
+    prof = PilotRuntime(slots=2, mode="real").run(g)
+    assert calls == ["a", "b"]
+    assert g.tasks["b"].result == 2
+    assert prof.n_failed == 0
+
+
+def test_retry_then_fail_cancels_dependents():
+    attempts = {"n": 0}
+
+    def boom(t):
+        attempts["n"] += 1
+        raise RuntimeError("nope")
+
+    g = TaskGraph()
+    g.add(Task(name="a", run=boom))
+    g.add(Task(name="b", deps=["a"], run=lambda t: 1))
+    prof = PilotRuntime(slots=1, mode="real", max_retries=2).run(g)
+    assert attempts["n"] == 3                        # 1 + 2 retries
+    assert g.tasks["a"].state == TaskState.FAILED
+    assert g.tasks["b"].state == TaskState.CANCELED
+    assert prof.n_failed == 1
+
+
+def test_straggler_speculation_cuts_makespan():
+    g = _graph([10.0] * 15 + [100.0])
+    rt = PilotRuntime(slots=8, mode="sim", straggler_factor=2.0)
+    prof = rt.run(g)
+    assert prof.n_speculative >= 1
+    assert prof.ttc < 100.0
+    assert all(t.state == TaskState.DONE for t in g.tasks.values())
+
+
+def test_elastic_grow_and_shrink():
+    rt = PilotRuntime(slots=2, mode="sim")
+    rt.resize(4)
+    prof = rt.run(_graph([10.0] * 8))
+    assert prof.ttc == 20.0
+    rt = PilotRuntime(slots=8, mode="sim")
+    rt.resize(2)
+    prof = rt.run(_graph([10.0] * 8))
+    assert prof.ttc == 40.0
+
+
+def test_journal_restart_skips_done():
+    with tempfile.TemporaryDirectory() as d:
+        path = f"{d}/j.jsonl"
+        g1 = _graph([1.0] * 5)
+        PilotRuntime(slots=2, mode="sim", journal=Journal(path)).run(g1)
+        g2 = _graph([1.0] * 5)
+        prof = PilotRuntime(slots=2, mode="sim",
+                            journal=Journal(path)).run(g2)
+        assert prof.ttc == 0.0          # everything replayed as DONE
+        assert all(t.state == TaskState.DONE for t in g2.tasks.values())
+
+
+def test_graph_cycle_detection():
+    g = TaskGraph()
+    g.add(Task(name="a", deps=["b"]))
+    g.add(Task(name="b", deps=["a"]))
+    with pytest.raises(ValueError, match="cycle"):
+        g.validate()
+
+
+def test_multislot_tasks_respect_capacity():
+    g = _graph([10.0, 10.0, 10.0], slots={0: 2, 1: 2, 2: 2})
+    prof = PilotRuntime(slots=4, mode="sim").run(g)
+    assert prof.ttc == 20.0             # two fit concurrently, third waits
+
+
+def test_metropolis_host_vs_device():
+    import jax
+    import jax.numpy as jnp
+    from repro.core.ensemble import metropolis_swap_device
+    from repro.plugins.re_exchange import metropolis_swaps
+    losses = np.array([3.0, 2.5, 2.0, 1.5])
+    temps = np.array([1.0, 2.0, 4.0, 8.0])
+    # deterministic acceptance: huge energy gap -> always swap pair (0,1)
+    newt, acc = metropolis_swaps([10.0, 0.0, 0.0, 0.0],
+                                 [1.0, 10.0, 10.0, 10.0], cycle=0)
+    assert (newt[0], newt[1]) == (10.0, 1.0)
+    nt_dev, nacc = metropolis_swap_device(
+        jnp.array([10.0, 0.0, 0.0, 0.0]), jnp.array([1.0, 10.0, 10.0, 10.0]),
+        0, jax.random.PRNGKey(0))
+    assert float(nt_dev[0]) == 10.0 and float(nt_dev[1]) == 1.0

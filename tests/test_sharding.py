@@ -1,0 +1,90 @@
+"""Partition-rule validation WITHOUT devices: for every arch and both
+production meshes, every param/cache/batch sharding must divide its array
+(jit input shardings require exact divisibility)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh
+
+from repro.configs import SHAPES, get_config, list_configs
+from repro.dist.sharding import (batch_shardings, cache_shardings,
+                                 param_spec, state_shardings)
+
+MESHES = {
+    "pod16x16": AbstractMesh((16, 16), ("data", "model")),
+    "pod2x16x16": AbstractMesh((2, 16, 16), ("pod", "data", "model")),
+}
+
+
+def _axis_size(mesh, entry):
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        n *= dict(zip(mesh.axis_names, mesh.axis_sizes))[a]
+    return n
+
+
+def _check_tree(mesh, specs, shardings):
+    flat_s, _ = jax.tree.flatten(shardings)
+    flat_x = jax.tree.leaves(specs)
+    assert len(flat_s) == len(flat_x)
+    for x, s in zip(flat_x, flat_s):
+        if s is None:
+            continue
+        spec = s.spec
+        for d, entry in enumerate(spec):
+            if entry is None:
+                continue
+            n = _axis_size(mesh, entry)
+            assert x.shape[d] % n == 0, \
+                f"shape {x.shape} dim {d} not divisible by {entry}({n})"
+        # no mesh axis used twice
+        used = []
+        for entry in spec:
+            if entry is None:
+                continue
+            used += list(entry if isinstance(entry, tuple) else (entry,))
+        assert len(used) == len(set(used)), f"axis reused in {spec}"
+
+
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+@pytest.mark.parametrize("arch", list(list_configs()))
+def test_param_shardings_divide(arch, mesh_name):
+    from repro.train import train_state_specs
+    cfg = get_config(arch)
+    mesh = MESHES[mesh_name]
+    specs = train_state_specs(cfg)
+    sh = state_shardings(cfg, mesh, specs)
+    _check_tree(mesh, specs, sh)
+
+
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+@pytest.mark.parametrize("arch", list(list_configs()))
+def test_cache_and_batch_shardings_divide(arch, mesh_name):
+    from repro.configs import cell_applicable, input_specs
+    from repro.serve import cache_specs
+    cfg = get_config(arch).replace(param_dtype="bfloat16")
+    mesh = MESHES[mesh_name]
+    for shape in SHAPES.values():
+        ok, _ = cell_applicable(cfg, shape)
+        if not ok:
+            continue
+        b = input_specs(cfg, shape)
+        _check_tree(mesh, b, batch_shardings(cfg, mesh, b, shape.kind))
+        if shape.kind == "decode":
+            c = cache_specs(cfg, shape.global_batch, shape.seq_len)
+            _check_tree(mesh, c, cache_shardings(cfg, mesh, c))
+
+
+def test_fsdp_spec_picks_divisible_dim():
+    mesh = MESHES["pod16x16"]
+    cfg = get_config("minicpm-2b")
+    # vocab 122753 is indivisible -> embedding must fall back
+    spec = param_spec(cfg, mesh, ("embed", "tok"), (122753, 2304))
+    for d, entry in enumerate(spec):
+        if entry is None:
+            continue
+        n = _axis_size(mesh, entry)
+        assert (122753, 2304)[d] % n == 0

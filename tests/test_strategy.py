@@ -1,0 +1,55 @@
+"""Adaptive execution strategy (paper §5 future work) — decision rules +
+end-to-end with the DES runtime."""
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.runtime.executor import PilotRuntime
+from repro.runtime.states import Task, TaskGraph
+from repro.runtime.strategy import AdaptiveSlotStrategy
+
+
+def test_grows_on_backlog():
+    s = AdaptiveSlotStrategy(min_slots=4, max_slots=64)
+    assert s.decide(utilization=0.95, backlog=40, slots=8) == 16
+    assert s.decide(utilization=0.95, backlog=200, slots=40) == 64  # capped
+
+
+def test_shrinks_when_idle():
+    s = AdaptiveSlotStrategy(min_slots=4, max_slots=64)
+    assert s.decide(utilization=0.2, backlog=0, slots=32) == 16
+    assert s.decide(utilization=0.1, backlog=0, slots=5) == 4       # floor
+
+
+def test_holds_in_band():
+    s = AdaptiveSlotStrategy(min_slots=4, max_slots=64)
+    assert s.decide(utilization=0.7, backlog=2, slots=16) == 16
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0, 1), st.integers(0, 500), st.integers(1, 128))
+def test_decision_always_in_bounds(util, backlog, slots):
+    s = AdaptiveSlotStrategy(min_slots=4, max_slots=64)
+    out = s.decide(utilization=util, backlog=backlog, slots=slots)
+    assert 4 <= out <= 64
+
+
+def test_adaptive_resize_between_phases():
+    """Two-phase workload: wide phase then narrow phase; the strategy grows
+    then shrinks the pilot and the second phase runs at the smaller width."""
+    rt = PilotRuntime(slots=8, mode="sim")
+    strat = AdaptiveSlotStrategy(min_slots=2, max_slots=64)
+
+    g1 = TaskGraph()
+    for i in range(64):
+        g1.add(Task(name=f"wide{i}", duration=10.0))
+    # pretend phase-0 profiling saw full utilization and a 64-task backlog
+    rt.resize(strat.decide(utilization=1.0, backlog=64, slots=rt.slots))
+    p1 = rt.run(g1)
+    assert p1.ttc == 10.0 * (64 // 16)     # grew 8 -> 16
+
+    g2 = TaskGraph()
+    for i in range(4):
+        g2.add(Task(name=f"narrow{i}", duration=10.0))
+    rt.resize(strat.decide(utilization=0.2, backlog=4, slots=rt.slots))
+    p2 = rt.run(g2)
+    assert p2.ttc == 10.0                  # shrank 16 -> 8, 4 tasks fit

@@ -1,0 +1,151 @@
+"""End-to-end system tests: the paper's five-step application flow with all
+three patterns + real LM kernels + fused ensemble mode + serving."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeSpec
+from repro.core import (FusedEnsemble, Kernel, Pipeline, ReplicaExchange,
+                        SimulationAnalysisLoop, SingleClusterEnvironment)
+
+
+def test_paper_five_step_flow_charcount():
+    """Paper Fig.1 steps 1-5 with the paper's own toy workload."""
+    class CharCount(Pipeline):                       # step 1: pick pattern
+        def stage_1(self, i):                        # step 2: kernels
+            k = Kernel("misc.mkfile")
+            k.arguments = {"bytes": 1 << 14, "seed": i}
+            return k
+
+        def stage_2(self, i):
+            return Kernel("misc.ccount")
+
+    cluster = SingleClusterEnvironment(               # step 3: resource
+        resource="local.cpu", cores=8, walltime=5)
+    cluster.allocate()
+    prof = cluster.run(CharCount(stages=2, instances=16))   # step 4
+    cluster.deallocate()                              # step 5
+    assert prof.n_failed == 0
+    assert prof.n_tasks == 32
+    counts = [v for k, v in prof.results["tasks"].items()
+              if k.endswith("stage2")]
+    assert all(c["total"] == 1 << 14 for c in counts)
+    assert prof.t_enmd_overhead > 0
+
+
+def test_replica_exchange_with_lm_members():
+    class PBT(ReplicaExchange):
+        def __init__(self, cycles, replicas):
+            super().__init__(cycles, replicas)
+            self.temps = [3e-4 * 1.5 ** i for i in range(replicas)]
+            self.temp_history = [list(self.temps)]
+
+        def prepare_replica_for_md(self, r):
+            k = Kernel("lm.train")
+            k.arguments = {"arch": "reduced:gemma2-2b", "steps": 1,
+                           "member": r.id, "ensemble": "systest_pbt",
+                           "lr": self.temps[r.id], "batch": 2, "seq": 32}
+            return k
+
+        def prepare_exchange(self, replicas):
+            k = Kernel("re.exchange")
+            k.arguments = {"replicas": len(replicas),
+                           "cycle": replicas[0].cycle,
+                           "temps": self.temps, "ensemble": "systest_pbt"}
+            return k
+
+        def apply_exchange(self, result, replicas):
+            self.temps = result["temps"]
+            self.temp_history.append(list(self.temps))
+
+    cl = SingleClusterEnvironment(cores=3)
+    cl.allocate()
+    app = PBT(cycles=2, replicas=3)
+    prof = cl.run(app)
+    cl.deallocate()
+    assert prof.n_failed == 0
+    assert len(app.temp_history) == 3
+    # losses are real numbers from real training
+    for c in range(2):
+        assert all(np.isfinite(prof.results[f"exchange_{c}"]["losses"]))
+
+
+def test_sal_convergence_with_lm():
+    class TrainUntil(SimulationAnalysisLoop):
+        def simulation_stage(self, it, i):
+            k = Kernel("lm.train")
+            k.arguments = {"arch": "reduced:gemma2-2b", "steps": 1,
+                           "member": i, "ensemble": "systest_sal",
+                           "batch": 2, "seq": 32}
+            return k
+
+        def analysis_stage(self, it, j):
+            k = Kernel("lm.eval")
+            k.arguments = {"arch": "reduced:gemma2-2b", "member": j,
+                           "ensemble": "systest_sal", "batch": 2, "seq": 32}
+            return k
+
+        def should_continue(self, it, results):
+            return results[0]["loss"] > 1.0 and it < 1
+
+    cl = SingleClusterEnvironment(cores=2)
+    cl.allocate()
+    prof = cl.run(TrainUntil(maxiterations=5, simulation_instances=2,
+                             analysis_instances=1))
+    cl.deallocate()
+    assert prof.n_failed == 0
+    assert "analysis_0" in prof.results
+
+
+def test_fused_ensemble_matches_task_semantics():
+    """Fused SPMD ensemble runs, losses finite, temperatures permute."""
+    cfg = reduced(get_config("gemma2-2b"))
+    fe = FusedEnsemble(cfg, 4)
+    ens, hist = fe.run(jax.random.PRNGKey(0), cycles=2, steps_per_cycle=1,
+                       shape=ShapeSpec("t", "train", 32, 2))
+    assert len(hist) == 2
+    for h in hist:
+        assert np.isfinite(h["losses"]).all()
+        # temperature multiset preserved by swaps
+        np.testing.assert_allclose(sorted(np.asarray(h["temps"])),
+                                   sorted(np.asarray(fe.temps0)), rtol=1e-6)
+
+
+def test_batched_serving():
+    from repro.models import init_params
+    from repro.serve import BatchedServer, Request
+    cfg = reduced(get_config("gemma2-2b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    srv = BatchedServer(cfg, params, batch=2, prompt_len=8, max_len=16)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 8),
+                    max_new_tokens=3) for i in range(5)]
+    srv.submit(reqs)
+    done = srv.run()
+    assert len(done) == 5
+    assert all(len(r.out_tokens) == 3 for r in done)
+    assert srv.stats["prefills"] == 3     # ceil(5/2) waves
+
+
+def test_lm_checkpoint_kernel(tmp_path):
+    class TrainThenSave(Pipeline):
+        def stage_1(self, i):
+            k = Kernel("lm.train")
+            k.arguments = {"arch": "reduced:gemma2-2b", "steps": 1,
+                           "member": i, "ensemble": "systest_ck",
+                           "batch": 2, "seq": 32}
+            return k
+
+        def stage_2(self, i):
+            k = Kernel("lm.checkpoint")
+            k.arguments = {"dir": str(tmp_path / f"m{i}"), "member": i,
+                           "ensemble": "systest_ck"}
+            return k
+
+    cl = SingleClusterEnvironment(cores=2)
+    cl.allocate()
+    prof = cl.run(TrainThenSave(stages=2, instances=2))
+    cl.deallocate()
+    assert prof.n_failed == 0
+    assert (tmp_path / "m0").exists()
