@@ -14,18 +14,17 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import time
 
 import jax
-from jax.sharding import Mesh
-
 from repro.configs import SHAPES, get_config, input_specs
 from repro.dist.sharding import batch_shardings, state_shardings
+from repro.dist.topology import SlotTopology
 from repro.launch.mesh import make_production_mesh
 from repro.train import build_train_step, train_state_specs
 
 
 def pod_submeshes(mesh):
     """Split the (pod, data, model) pilot mesh into per-pod slots."""
-    return [Mesh(mesh.devices[i], ("data", "model"))
-            for i in range(mesh.devices.shape[0])]
+    topo = SlotTopology.from_mesh(mesh, slot_axis="pod")
+    return [topo.submesh([i]) for i in range(topo.n_slots)]
 
 
 def main():

@@ -1,0 +1,18 @@
+"""Distribution layer: GSPMD partition specs and mesh-slot topology.
+
+``repro.dist.sharding`` decides *how arrays are laid out* on a mesh
+(params, optimizer state, batches, decode caches);
+``repro.dist.topology`` decides *which devices a pilot slot owns*
+(submesh carving for the ensemble executor).
+"""
+from repro.dist.sharding import (  # noqa: F401
+    abstract_mesh,
+    batch_shardings,
+    cache_shardings,
+    constrain_batch,
+    constrain_like_params,
+    constrain_logits,
+    param_spec,
+    state_shardings,
+)
+from repro.dist.topology import SlotTopology  # noqa: F401

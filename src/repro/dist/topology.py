@@ -1,0 +1,89 @@
+"""Mesh-slot topology: the pilot's slots as device submeshes.
+
+The paper's pilot holds N cores and a task occupies ``slots`` of them.  At
+fleet scale the pilot holds a device *mesh* and a slot is a fixed block of
+devices — e.g. one pod of the 2x16x16 multi-pod mesh, so each
+replica-exchange member is itself a 256-chip SPMD program.  ``SlotTopology``
+carves the mesh's device array into equal slots; ``PilotRuntime`` acquires
+and releases slot ids, and a task builds a ``jax.sharding.Mesh`` over its
+slots via :meth:`SlotTopology.submesh`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SlotTopology:
+    """Partition of a device array into equal pilot slots.
+
+    ``devices``: array with leading dim = number of slots; ``axis_names``:
+    mesh axes of ONE slot (matching ``devices.shape[1:]``).
+    """
+    devices: Any
+    axis_names: Tuple[str, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "devices", np.asarray(self.devices))
+        if self.devices.ndim - 1 != len(self.axis_names):
+            raise ValueError(
+                f"slot shape {self.devices.shape[1:]} does not match "
+                f"axis names {self.axis_names}")
+
+    # ------------------------------------------------------------ builders
+    @classmethod
+    def from_mesh(cls, mesh, slot_axis: str | None = None) -> "SlotTopology":
+        """One slot per index of ``slot_axis`` (default: outermost axis).
+
+        ``from_mesh(pod_mesh)`` on the ("pod", "data", "model") mesh yields
+        2 slots of shape ("data", "model") — one pod per slot.
+        """
+        names = tuple(mesh.axis_names)
+        slot_axis = slot_axis or names[0]
+        i = names.index(slot_axis)
+        dev = np.moveaxis(np.asarray(mesh.devices), i, 0)
+        return cls(devices=dev, axis_names=names[:i] + names[i + 1:])
+
+    @classmethod
+    def even(cls, devices: Sequence[Any], n_slots: int,
+             axis_names: Tuple[str, ...] = ("model",)) -> "SlotTopology":
+        """Split a flat device list into ``n_slots`` equal 1-axis slots."""
+        arr = np.asarray(devices)
+        if n_slots <= 0 or arr.size % n_slots:
+            raise ValueError(f"{arr.size} devices not divisible into "
+                             f"{n_slots} slots")
+        return cls(devices=arr.reshape(n_slots, arr.size // n_slots),
+                   axis_names=axis_names)
+
+    # ------------------------------------------------------------ queries
+    @property
+    def n_slots(self) -> int:
+        return int(self.devices.shape[0])
+
+    @property
+    def devices_per_slot(self) -> int:
+        return int(np.prod(self.devices.shape[1:], dtype=np.int64))
+
+    def slot_devices(self, slot_ids: Sequence[int]) -> np.ndarray:
+        """(len(slot_ids), *slot_shape) device block, id-sorted."""
+        ids = sorted(int(i) for i in slot_ids)
+        if not ids:
+            raise ValueError("empty slot id list")
+        if ids[0] < 0 or ids[-1] >= self.n_slots:
+            raise ValueError(f"slot ids {ids} out of range 0..{self.n_slots - 1}")
+        return self.devices[np.asarray(ids)]
+
+    def submesh(self, slot_ids: Sequence[int]):
+        """Mesh over the devices of ``slot_ids``.
+
+        One slot keeps the slot axes; several slots gain a leading "slot"
+        axis (a wider data-parallel dim for multi-slot tasks).
+        """
+        from jax.sharding import Mesh
+        block = self.slot_devices(slot_ids)
+        if block.shape[0] == 1:
+            return Mesh(block[0], self.axis_names)
+        return Mesh(block, ("slot",) + tuple(self.axis_names))

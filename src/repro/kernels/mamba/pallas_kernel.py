@@ -13,7 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.pallas_compat import tpu_compiler_params
 
 
 def _mamba_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, h0_ref,
@@ -68,7 +68,7 @@ def selective_scan_pallas(x, dt, A, Bm, C, D, h0, *, block_d: int = 256,
             jax.ShapeDtypeStruct((B, T, d), x.dtype),
             jax.ShapeDtypeStruct((B, d, n), h0.dtype),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x, dt, A, Bm, C, D, h0)

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import tpu_compiler_params
+
 
 def _gmm_kernel(sizes_ref, x_ref, w_ref, o_ref, *, block_c):
     e = pl.program_id(0)
@@ -64,7 +66,7 @@ def gmm_pallas(x, w, group_sizes, *, block_c: int = 128, block_f: int = 128,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
     )(group_sizes.astype(jnp.int32), x, w)

@@ -1,0 +1,17 @@
+"""Version portability for Pallas-TPU compiler params.
+
+The TPU compiler-params dataclass was renamed ``TPUCompilerParams`` ->
+``CompilerParams`` across JAX releases; kernels call this shim so the same
+source runs on either (the container pins jax 0.4.x, production may not).
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CLS = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams(**kwargs)`` under whichever name exists."""
+    return _CLS(**kwargs)

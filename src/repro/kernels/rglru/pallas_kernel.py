@@ -15,7 +15,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.pallas_compat import tpu_compiler_params
 
 
 def _rglru_kernel(x_ref, a_ref, h0_ref, y_ref, hlast_ref, *, T):
@@ -56,7 +56,7 @@ def linear_scan_pallas(x, a, h0, *, block_c: int = 256,
             jax.ShapeDtypeStruct((B, T, C), x.dtype),
             jax.ShapeDtypeStruct((B, C), h0.dtype),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x, a, h0)

@@ -15,7 +15,7 @@ import time
 import jax
 
 from repro.checkpoint import Checkpointer
-from repro.configs import SHAPES, get_config, reduced
+from repro.configs import SHAPES, get_config, input_specs, reduced
 from repro.configs.base import ShapeSpec
 from repro.data import SyntheticLM
 from repro.dist.sharding import batch_shardings, state_shardings
@@ -65,8 +65,7 @@ def main():
     step_fn = build_train_step(cfg, mesh, hyper)
     if mesh is not None:
         st_sh = state_shardings(cfg, mesh, train_state_specs(cfg))
-        b_specs = __import__("repro.configs", fromlist=["input_specs"]) \
-            .input_specs(cfg, shape)
+        b_specs = input_specs(cfg, shape)
         b_sh = batch_shardings(cfg, mesh, b_specs, "train")
         step = jax.jit(step_fn, in_shardings=(st_sh, b_sh),
                        out_shardings=(st_sh, None), donate_argnums=(0,))

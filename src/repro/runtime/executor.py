@@ -13,6 +13,13 @@ Two modes:
 Fault tolerance: bounded retries with backoff; straggler mitigation via
 speculative duplicates (sim+real); elastic pilot resize mid-run; journal for
 restart.
+
+Mesh-aware slots: with a ``topology`` (repro.dist.topology.SlotTopology) the
+pilot's slots are *device submeshes* — a task occupying ``slots`` pilot slots
+is granted that many slot ids (``task.meta["slot_ids"]``) and can build its
+JAX mesh via ``runtime.submesh_for(task)``.  This ties the paper's pilot-slot
+abstraction to device placement: e.g. one replica-exchange member per pod of
+the 2x16x16 production mesh.
 """
 from __future__ import annotations
 
@@ -21,7 +28,6 @@ import statistics
 import threading
 import time
 import traceback
-from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
@@ -49,32 +55,83 @@ class RuntimeProfile:
 
 
 class PilotRuntime:
-    def __init__(self, slots: int, *, mode: str = "real",
+    def __init__(self, slots: Optional[int] = None, *, mode: str = "real",
+                 topology=None,
                  journal: Optional[Journal] = None,
                  max_retries: int = 2,
                  straggler_factor: float = 0.0,
-                 min_straggler_samples: int = 5):
+                 min_straggler_samples: int = 5,
+                 on_schedule: Optional[Callable] = None):
         assert mode in ("real", "sim")
+        if slots is None:
+            if topology is None:
+                raise ValueError("need slots= or topology=")
+            slots = topology.n_slots
         self.slots = slots
         self.mode = mode
+        self.topology = topology
+        if topology is not None and slots > topology.n_slots:
+            raise ValueError(f"{slots} slots > {topology.n_slots} submeshes")
+        # free slot ids (only tracked when the slots are device submeshes)
+        self._free_ids: Optional[List[int]] = \
+            None if topology is None else list(range(topology.n_slots))[::-1]
         self.journal = journal or Journal(None)
         self.max_retries = max_retries
         self.straggler_factor = straggler_factor
         self.min_straggler_samples = min_straggler_samples
+        # called as on_schedule(runtime, graph, vnow) before every
+        # scheduling step (vnow None in real mode) — the hook adaptive
+        # strategies use to resize() the pilot MID-run
+        self.on_schedule = on_schedule
         self._resize_to: Optional[int] = None
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------ elastic
     def resize(self, slots: int):
         """Elastic pilot resize; takes effect at the next scheduling step."""
+        if self.topology is not None and slots > self.topology.n_slots:
+            raise ValueError(f"{slots} slots > {self.topology.n_slots} "
+                             "submeshes in the pilot topology")
         with self._lock:
             self._resize_to = slots
 
-    def _apply_resize(self):
+    def _apply_resize(self) -> int:
+        """Apply a pending resize; returns the capacity delta (real mode
+        must credit/debit its free-slot counter by it)."""
         with self._lock:
-            if self._resize_to is not None:
-                self.slots = self._resize_to
-                self._resize_to = None
+            if self._resize_to is None:
+                return 0
+            delta = self._resize_to - self.slots
+            self.slots = self._resize_to
+            self._resize_to = None
+            return delta
+
+    # ------------------------------------------------------------ submeshes
+    def _acquire_slots(self, t: Task):
+        """Grant ``t.slots`` slot ids (no-op without a topology).
+
+        Called wherever busy-count is incremented; capacity gating
+        (busy <= self.slots <= topology.n_slots) guarantees availability.
+        """
+        if self._free_ids is None:
+            return
+        t.meta["slot_ids"] = [self._free_ids.pop() for _ in range(t.slots)]
+        t.meta.pop("slots_released", None)
+
+    def _release_slots(self, t: Task):
+        """Return t's slot ids exactly once (supersession may race a pop)."""
+        if self._free_ids is None or "slot_ids" not in t.meta:
+            return
+        if t.meta.get("slots_released"):
+            return
+        t.meta["slots_released"] = True
+        self._free_ids.extend(t.meta["slot_ids"])
+
+    def submesh_for(self, t: Task):
+        """jax Mesh over the devices of the slots granted to ``t``."""
+        if self.topology is None:
+            raise ValueError("runtime has no device topology")
+        return self.topology.submesh(t.meta["slot_ids"])
 
     # ------------------------------------------------------------ run
     def run(self, graph: TaskGraph) -> RuntimeProfile:
@@ -108,6 +165,8 @@ class PilotRuntime:
             return out
 
         while not graph.done() or running:
+            if self.on_schedule is not None:
+                self.on_schedule(self, graph, vnow)
             self._apply_resize()
 
             def schedule():
@@ -117,6 +176,7 @@ class PilotRuntime:
                     if self.slots - busy < t.slots:
                         break
                     busy += t.slots
+                    self._acquire_slots(t)
                     t.attempts += 1
                     t.state = TaskState.RUNNING
                     t.t_scheduled = time.perf_counter()
@@ -144,9 +204,11 @@ class PilotRuntime:
                 # advance the clock to its stale finish time
                 if not t.meta.get("slot_freed"):
                     busy -= t.slots
+                self._release_slots(t)
                 continue
             vnow = max(vnow, vfin)
             busy -= t.slots
+            self._release_slots(t)
 
             def finish():
                 nonlocal busy
@@ -166,6 +228,7 @@ class PilotRuntime:
                         orig.v_finished = vnow
                         orig.meta["slot_freed"] = True
                         busy -= orig.slots
+                        self._release_slots(orig)
                         self.journal.record(orig, "finished",
                                             by="speculative")
                     spec_launched.pop(t.speculative_of, None)
@@ -209,6 +272,7 @@ class PilotRuntime:
                     dup.v_started = max(vnow, trigger)
                     prof.n_speculative += 1
                     busy += t.slots
+                    self._acquire_slots(dup)
                     heapq.heappush(
                         running, (max(vnow, trigger) + med, id(dup), dup))
                     spec_launched[t.name] = dup
@@ -220,7 +284,9 @@ class PilotRuntime:
         lock = threading.Lock()
         cv = threading.Condition(lock)
         free = {"n": self.slots}
-        pool = ThreadPoolExecutor(max_workers=max(self.slots, 1))
+        # thread-per-task: slot gating already bounds concurrency, and a
+        # fixed pool would cap an elastic grow mid-run
+        workers: List[threading.Thread] = []
 
         def execute(t: Task):
             t.t_started = time.perf_counter()
@@ -242,6 +308,7 @@ class PilotRuntime:
             t.t_finished = time.perf_counter()
             with cv:
                 free["n"] += t.slots
+                self._release_slots(t)
                 prof.t_exec += t.t_finished - t.t_started
                 prof.slot_busy += (t.t_finished - t.t_started) * t.slots
                 self.journal.record(
@@ -250,24 +317,35 @@ class PilotRuntime:
 
         with cv:
             while True:
-                self._apply_resize()
+                if self.on_schedule is not None:
+                    self.on_schedule(self, graph, None)
+                free["n"] += self._apply_resize()   # elastic grow/shrink
                 t0 = time.perf_counter()
-                ready = [t for t in graph.ready() if t.slots <= free["n"]]
-                for t in ready:
+                # re-check capacity per task: a single pass may admit
+                # several tasks, each draining free["n"]
+                scheduled = []
+                for t in graph.ready():
+                    if t.slots > free["n"]:
+                        continue
+                    scheduled.append(t)
                     free["n"] -= t.slots
+                    self._acquire_slots(t)
                     t.meta["dep_results"] = {
                         d: graph.tasks[d].result for d in t.deps}
                     t.attempts += 1
                     t.state = TaskState.RUNNING
                     t.t_scheduled = time.perf_counter()
                     self.journal.record(t, "scheduled")
-                    pool.submit(execute, t)
+                    th = threading.Thread(target=execute, args=(t,),
+                                          daemon=True)
+                    workers.append(th)
+                    th.start()
                 prof.t_rts_overhead += time.perf_counter() - t0
                 if graph.done():
                     break
                 in_flight = any(t.state == TaskState.RUNNING
                                 for t in graph.tasks.values())
-                if not ready and not in_flight:
+                if not scheduled and not in_flight:
                     # nothing runnable: cancel unsatisfiable tasks
                     for t in graph.tasks.values():
                         if t.state == TaskState.NEW and any(
@@ -279,5 +357,6 @@ class PilotRuntime:
                     if graph.done():
                         break
                 cv.wait(timeout=0.05)
-        pool.shutdown(wait=True)
+        for th in workers:
+            th.join()
         prof.ttc = time.perf_counter() - t_start

@@ -67,8 +67,25 @@ class BatchedServer:
                  max_len: int, mesh=None):
         self.cfg, self.params, self.mesh = cfg, params, mesh
         self.B, self.S0, self.Smax = batch, prompt_len, max_len
-        self.prefill = jax.jit(build_prefill_step(cfg, mesh, cache_len=max_len))
-        self.step = jax.jit(build_serve_step(cfg, mesh))
+        if mesh is not None:
+            # pin the distributed layout: params/cache stay sharded across
+            # decode steps (cache donated), logits replicated for sampling
+            from repro.dist.sharding import cache_shardings, state_shardings
+            p_sh = state_shardings(cfg, mesh, params)
+            c_sh = cache_shardings(cfg, mesh,
+                                   cache_specs(cfg, batch, max_len))
+            self.prefill = jax.jit(
+                build_prefill_step(cfg, mesh, cache_len=max_len),
+                in_shardings=(p_sh, None),
+                out_shardings={"logits": None, "cache": c_sh})
+            self.step = jax.jit(
+                build_serve_step(cfg, mesh),
+                in_shardings=(p_sh, c_sh, None, None),
+                out_shardings=(None, c_sh), donate_argnums=(1,))
+        else:
+            self.prefill = jax.jit(
+                build_prefill_step(cfg, mesh, cache_len=max_len))
+            self.step = jax.jit(build_serve_step(cfg, mesh))
         self.queue: collections.deque = collections.deque()
         self.stats = {"served": 0, "decode_steps": 0, "prefills": 0}
 

@@ -13,11 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
-
 from repro.configs.base import ModelConfig
-from repro.dist.sharding import constrain_logits
+from repro.dist.sharding import constrain_batch, constrain_logits
 
 
 def _head_weight(cfg: ModelConfig, params):
@@ -38,11 +35,8 @@ def chunked_softmax_xent(cfg: ModelConfig, params, h, labels, *, mesh=None
         # vocab-parallel loss needs "model" free: reshard batch from the
         # (possibly fsdp-flat) training layout to ("pod","data") once, in
         # bf16, before the chunk scan.
-        ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-        h = jax.lax.with_sharding_constraint(
-            h, NamedSharding(mesh, P(ba, None, None)))
-        labels = jax.lax.with_sharding_constraint(
-            labels, NamedSharding(mesh, P(ba, None)))
+        h = constrain_batch(cfg, mesh, h, "train")
+        labels = constrain_batch(cfg, mesh, labels, "train")
     chunk = cfg.loss_chunk if (cfg.loss_chunk and S % cfg.loss_chunk == 0) \
         else S
     nc = S // chunk

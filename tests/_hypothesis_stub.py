@@ -1,0 +1,153 @@
+"""Deterministic fallback for the tiny `hypothesis` subset these tests use.
+
+The container may not ship hypothesis and installing packages is not an
+option, so ``conftest.py`` installs this stub into ``sys.modules`` when the
+real library is missing.  It implements just what the suite needs —
+``given``, ``settings``, ``strategies.{integers,floats,booleans,lists,data}``
+— drawing examples from a seeded numpy Generator, so runs are exactly
+reproducible (no shrinking, no database).  With real hypothesis installed
+this module is never imported.
+"""
+from __future__ import annotations
+
+
+import sys
+import types
+import zlib
+
+import numpy as np
+
+
+class Strategy:
+    def __init__(self, sample_fn, label="strategy"):
+        self._sample = sample_fn
+        self.label = label
+
+    def sample(self, rng):
+        return self._sample(rng)
+
+    def __repr__(self):
+        return self.label
+
+
+def integers(min_value, max_value):
+    return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)),
+                    f"integers({min_value}, {max_value})")
+
+
+def floats(min_value=0.0, max_value=1.0, allow_nan=None, allow_infinity=None,
+           width=None):
+    return Strategy(lambda rng: float(rng.uniform(min_value, max_value)),
+                    f"floats({min_value}, {max_value})")
+
+
+def booleans():
+    return Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans()")
+
+
+def lists(elements, min_size=0, max_size=10):
+    def sample(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.sample(rng) for _ in range(n)]
+    return Strategy(sample, f"lists({elements!r}, {min_size}, {max_size})")
+
+
+class _DataObject:
+    """Interactive draw: ``data.draw(st.integers(0, 3))``."""
+
+    def __init__(self, rng):
+        self._rng = rng
+        self.draws = []
+
+    def draw(self, strategy, label=None):
+        v = strategy.sample(self._rng)
+        self.draws.append((label or strategy.label, v))
+        return v
+
+
+class _DataStrategy(Strategy):
+    pass
+
+
+def data():
+    return _DataStrategy(lambda rng: rng, "data()")
+
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+def given(*strategies):
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest must see a zero-arg signature,
+        # not the original one (it would treat drawn args as fixtures).
+        def wrapper():
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                seed = zlib.crc32(f"{fn.__module__}.{fn.__name__}:{i}"
+                                  .encode())
+                rng = np.random.default_rng(seed)
+                vals = [(_DataObject(rng) if isinstance(s, _DataStrategy)
+                         else s.sample(rng)) for s in strategies]
+                try:
+                    fn(*vals)
+                except Exception as e:
+                    shown = [v.draws if isinstance(v, _DataObject) else v
+                             for v in vals]
+                    raise AssertionError(
+                        f"falsifying example #{i} (seed {seed}): "
+                        f"{fn.__name__}({shown})") from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # @settings may sit BELOW @given (applied first, tagging fn)
+        wrapper._stub_max_examples = getattr(
+            fn, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+        return wrapper
+    return deco
+
+
+class settings:
+    """Accepts and applies max_examples; ignores the rest (deadline etc.)."""
+
+    _profiles: dict = {}
+
+    def __init__(self, max_examples=None, **kwargs):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        if self.max_examples is not None:
+            fn._stub_max_examples = self.max_examples
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, **kwargs):
+        cls._profiles[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name):
+        pass
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    data_too_large = "data_too_large"
+
+    @classmethod
+    def all(cls):
+        return [cls.too_slow, cls.filter_too_much, cls.data_too_large]
+
+
+def install():
+    """Register this stub as ``hypothesis`` / ``hypothesis.strategies``."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = HealthCheck
+    mod.__version__ = "0.0-repro-stub"
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "lists", "data"):
+        setattr(st_mod, name, globals()[name])
+    mod.strategies = st_mod
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

@@ -1,10 +1,27 @@
 import os
+import sys
+
+# Deterministic test settings: force the CPU backend (tests never want an
+# accelerator grabbed implicitly) and keep matmul precision fixed.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("JAX_DEFAULT_MATMUL_PRECISION", "highest")
 
 # Tests run on the single real CPU device — the 512-device stand-in is set
 # ONLY inside repro.launch.dryrun (see system design). Assert nobody leaked it.
 assert "xla_force_host_platform_device_count" not in \
     os.environ.get("XLA_FLAGS", ""), \
     "tests must not run with forced host device count"
+
+sys.path.insert(0, os.path.dirname(__file__))
+try:
+    from hypothesis import settings as _hyp_settings
+    # derandomize: property tests draw the same examples on every run/CI box
+    _hyp_settings.register_profile("repro-ci", derandomize=True,
+                                   deadline=None, print_blob=True)
+    _hyp_settings.load_profile("repro-ci")
+except ModuleNotFoundError:  # container without hypothesis: seeded stub
+    import _hypothesis_stub
+    _hypothesis_stub.install()
 
 import jax  # noqa: E402
 

@@ -1,0 +1,131 @@
+"""repro.dist unit tests: slot topology carving, executor integration with
+real devices, and sharding-helper edge cases not covered by the
+arch-sweep in test_sharding.py."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.dist.sharding import (abstract_mesh, constrain_batch,
+                                 constrain_like_params, constrain_logits,
+                                 mesh_axis_sizes, param_spec)
+from repro.dist.topology import SlotTopology
+
+MESH = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+
+
+# ---------------------------------------------------------------- topology
+
+def test_even_split_accounting():
+    topo = SlotTopology.even(np.arange(12), 4, axis_names=("model",))
+    assert topo.n_slots == 4
+    assert topo.devices_per_slot == 3
+    np.testing.assert_array_equal(topo.slot_devices([2])[0], [6, 7, 8])
+    # multi-slot block is id-sorted regardless of request order
+    np.testing.assert_array_equal(topo.slot_devices([3, 1]),
+                                  [[3, 4, 5], [9, 10, 11]])
+
+
+def test_even_split_rejects_indivisible():
+    with pytest.raises(ValueError, match="not divisible"):
+        SlotTopology.even(np.arange(10), 4)
+
+
+def test_slot_devices_bounds():
+    topo = SlotTopology.even(np.arange(8), 4)
+    with pytest.raises(ValueError):
+        topo.slot_devices([4])
+    with pytest.raises(ValueError):
+        topo.slot_devices([])
+
+
+def test_from_mesh_pod_axis():
+    # fake 2x4x4 device grid: one slot per pod, slot axes (data, model)
+    class FakeMesh:
+        devices = np.arange(32).reshape(2, 4, 4)
+        axis_names = ("pod", "data", "model")
+
+    topo = SlotTopology.from_mesh(FakeMesh())
+    assert topo.n_slots == 2
+    assert topo.axis_names == ("data", "model")
+    assert topo.devices_per_slot == 16
+    np.testing.assert_array_equal(topo.slot_devices([1])[0],
+                                  np.arange(16, 32).reshape(4, 4))
+
+
+def test_submesh_on_real_devices():
+    devs = jax.devices()
+    topo = SlotTopology.even(devs, len(devs))
+    m = topo.submesh([0])
+    assert m.devices.shape == (1,)
+    assert m.axis_names == ("model",)
+
+
+def test_runtime_submesh_for_task():
+    from repro.runtime.executor import PilotRuntime
+    from repro.runtime.states import Task, TaskGraph
+
+    devs = jax.devices()
+    rt = PilotRuntime(mode="real", topology=SlotTopology.even(devs, len(devs)))
+    g = TaskGraph()
+    seen = {}
+
+    def run(task):
+        m = rt.submesh_for(task)
+        seen["axes"] = m.axis_names
+        return m.devices.size
+
+    g.add(Task(name="a", run=run))
+    prof = rt.run(g)
+    assert prof.n_failed == 0
+    assert g.tasks["a"].result == 1
+    assert seen["axes"] == ("model",)
+    assert sorted(rt._free_ids) == list(range(len(devs)))
+
+
+def test_runtime_rejects_oversized_resize():
+    from repro.runtime.executor import PilotRuntime
+    rt = PilotRuntime(mode="sim", topology=SlotTopology.even(np.arange(4), 4))
+    assert rt.slots == 4
+    with pytest.raises(ValueError, match="submeshes"):
+        rt.resize(8)
+
+
+# ---------------------------------------------------------------- sharding
+
+def test_param_spec_expert_parallel():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    assert cfg.sharding_profile == "tp_ep"
+    spec = param_spec(cfg, MESH, ("blocks", "sub_0", "moe", "wi"),
+                      (24, 128, 2048, 768))
+    assert list(spec) == [None, "model", None, None]   # expert dim, not F
+
+
+def test_param_spec_2d_fsdp():
+    cfg = get_config("gemma2-2b")
+    spec = param_spec(cfg, MESH, ("embed", "tok"), (256_000, 2304))
+    sizes = mesh_axis_sizes(MESH)
+    used = [a for e in spec if e is not None
+            for a in (e if isinstance(e, tuple) else (e,))]
+    assert "model" in used and len(used) == len(set(used))
+    for d, e in enumerate(spec):
+        if e is None:
+            continue
+        n = int(np.prod([sizes[a] for a in
+                         (e if isinstance(e, tuple) else (e,))]))
+        assert (256_000, 2304)[d] % n == 0
+
+
+def test_constrain_helpers_identity_without_mesh():
+    cfg = get_config("gemma2-2b")
+    x = jax.numpy.ones((2, 8, 4))
+    assert constrain_batch(cfg, None, x, "train") is x
+    assert constrain_logits(cfg, None, x) is x
+    tree = {"embed": {"tok": x}}
+    assert constrain_like_params(cfg, None, tree)["embed"]["tok"] is x
+
+
+def test_abstract_mesh_helper_axes():
+    m = abstract_mesh((4, 8), ("data", "model"))
+    assert tuple(m.axis_names) == ("data", "model")
+    assert mesh_axis_sizes(m) == {"data": 4, "model": 8}

@@ -142,6 +142,167 @@ def test_multislot_tasks_respect_capacity():
     assert prof.ttc == 20.0             # two fit concurrently, third waits
 
 
+# ------------------------------------------------------- sim-mode edges
+
+def _slot_topology(n):
+    from repro.dist.topology import SlotTopology
+    # slot accounting needs no real devices; any object array works
+    return SlotTopology(np.arange(n).reshape(n, 1), ("model",))
+
+
+def test_speculative_supersession_frees_slot_exactly_once():
+    """Duplicate wins: the straggling original's slot is freed at
+    supersession and must NOT be freed again when its stale finish event
+    pops off the heap."""
+    topo = _slot_topology(8)
+    g = _graph([10.0] * 15 + [200.0])
+    rt = PilotRuntime(mode="sim", straggler_factor=2.0, topology=topo)
+    prof = rt.run(g)
+    orig = g.tasks["t15"]
+    assert prof.n_speculative == 1
+    assert orig.state == TaskState.DONE
+    assert orig.meta.get("slot_freed") is True          # superseded
+    # duplicate launched at trigger=30 (2x median after start=10), runs the
+    # median 10s: makespan 40, far below the 200s straggler
+    assert prof.ttc == 40.0
+    assert all(t.state == TaskState.DONE for t in g.tasks.values())
+    # slot-id pool intact: a double free (or leak) would change its size
+    assert sorted(rt._free_ids) == list(range(8))
+    assert prof.slot_busy <= prof.ttc * 8 + 1e-9
+
+
+def test_canceled_twin_bookkeeping():
+    """Original wins: the speculative twin is CANCELED and contributes
+    nothing to t_exec/slot_busy; its heap pop releases its slot."""
+    topo = _slot_topology(8)
+    g = _graph([10.0] * 15 + [25.0])
+    rt = PilotRuntime(mode="sim", straggler_factor=2.0, topology=topo)
+    prof = rt.run(g)
+    # trigger 30 + median 10 = 40 > the original's finish at 35: orig wins
+    assert prof.n_speculative == 1
+    assert g.tasks["t15"].state == TaskState.DONE
+    assert not g.tasks["t15"].meta.get("slot_freed")    # not superseded
+    assert prof.ttc == 35.0
+    assert prof.t_exec == 15 * 10.0 + 25.0              # twin excluded
+    assert prof.slot_busy == prof.t_exec                # 1-slot tasks
+    assert sorted(rt._free_ids) == list(range(8))       # twin's id returned
+
+
+def test_resize_takes_effect_mid_run():
+    """Elastic grow DURING a sim run (not between runs): the on_schedule
+    hook fires resize() once the first wave finished; later waves run at
+    the new width."""
+    fired = []
+
+    def grow(rt, graph, vnow):
+        if vnow is not None and vnow >= 10.0 and not fired:
+            fired.append(vnow)
+            rt.resize(4)
+
+    rt = PilotRuntime(slots=2, mode="sim", on_schedule=grow)
+    g = _graph([10.0] * 8)
+    prof = rt.run(g)
+    # wave1: 2 tasks @[0,10); resize at v=10; then 4-wide: 4 @[10,20),
+    # 2 @[20,30) -> makespan 30 (serial 2-wide would be 40)
+    assert fired and fired[0] == 10.0
+    assert prof.ttc == 30.0
+    assert rt.slots == 4
+    assert all(t.state == TaskState.DONE for t in g.tasks.values())
+
+
+def test_resize_takes_effect_mid_run_real_mode():
+    """Real-mode grow while a task is in flight: the freed capacity must
+    reach the scheduler (two tasks rendezvous on a barrier that only
+    passes if both run concurrently)."""
+    import threading
+
+    barrier = threading.Barrier(2, timeout=10)
+    g = TaskGraph()
+    g.add(Task(name="a", run=lambda t: barrier.wait()))
+    g.add(Task(name="b", run=lambda t: barrier.wait()))
+    grown = []
+
+    def grow(rt, graph, vnow):
+        if not grown and graph.tasks["a"].state == TaskState.RUNNING:
+            grown.append(1)
+            rt.resize(2)
+
+    prof = PilotRuntime(slots=1, mode="real", on_schedule=grow).run(g)
+    assert grown
+    assert prof.n_failed == 0
+    assert all(t.state == TaskState.DONE for t in g.tasks.values())
+
+
+def test_real_mode_never_oversubscribes():
+    """Regression: one scheduling pass admits several ready tasks and must
+    re-check capacity per task (a stale snapshot launched 2 tasks on a
+    1-slot pilot)."""
+    import threading
+    import time as _time
+
+    lock = threading.Lock()
+    concurrency = {"now": 0, "max": 0}
+
+    def work(t):
+        with lock:
+            concurrency["now"] += 1
+            concurrency["max"] = max(concurrency["max"], concurrency["now"])
+        _time.sleep(0.05)
+        with lock:
+            concurrency["now"] -= 1
+
+    g = TaskGraph()
+    for i in range(4):
+        g.add(Task(name=f"t{i}", run=work))
+    prof = PilotRuntime(slots=2, mode="real").run(g)
+    assert prof.n_failed == 0
+    assert concurrency["max"] <= 2
+
+
+def test_multislot_with_topology_grants_disjoint_submeshes():
+    topo = _slot_topology(4)
+    g = _graph([10.0, 10.0, 10.0], slots={0: 2, 1: 2, 2: 2})
+    rt = PilotRuntime(mode="sim", topology=topo)
+    prof = rt.run(g)
+    assert prof.ttc == 20.0
+    for t in g.tasks.values():
+        assert len(t.meta["slot_ids"]) == 2
+    # the two concurrent tasks held disjoint ids
+    first_wave = [t for t in g.tasks.values() if t.v_started == 0.0]
+    held = sum((t.meta["slot_ids"] for t in first_wave), [])
+    assert len(held) == len(set(held)) == 4
+    assert sorted(rt._free_ids) == list(range(4))
+
+
+# ------------------------------------------------------- journal replay
+
+def test_journal_partial_replay_skips_done():
+    """Restart from a PARTIAL journal: only unjournaled tasks re-run, and
+    the restarted profile still accounts for the full graph."""
+    import json
+    import os
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "j.jsonl")
+        g1 = _graph([1.0] * 6)
+        prof1 = PilotRuntime(slots=2, mode="sim",
+                             journal=Journal(path)).run(g1)
+        # crash simulation: keep the records of 3 tasks + one torn line
+        keep = [ln for ln in open(path).read().splitlines()
+                if json.loads(ln)["task"] in ("t0", "t1", "t2")]
+        with open(path, "w") as f:
+            f.write("\n".join(keep) + '\n{"task": "t3", "ev')
+        g2 = _graph([1.0] * 6)
+        prof2 = PilotRuntime(slots=2, mode="sim",
+                             journal=Journal(path)).run(g2)
+        assert prof2.n_tasks == prof1.n_tasks == 6
+        assert {"event": "journal_skip", "n": 3} in \
+            [{k: e[k] for k in ("event", "n")} for e in prof2.events
+             if e.get("event") == "journal_skip"]
+        assert prof2.t_exec == 3.0          # only t3..t5 executed
+        assert all(t.state == TaskState.DONE for t in g2.tasks.values())
+
+
 def test_metropolis_host_vs_device():
     import jax
     import jax.numpy as jnp

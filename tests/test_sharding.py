@@ -4,15 +4,14 @@ production meshes, every param/cache/batch sharding must divide its array
 import jax
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh
 
 from repro.configs import SHAPES, get_config, list_configs
-from repro.dist.sharding import (batch_shardings, cache_shardings,
-                                 param_spec, state_shardings)
+from repro.dist.sharding import (abstract_mesh, batch_shardings,
+                                 cache_shardings, param_spec, state_shardings)
 
 MESHES = {
-    "pod16x16": AbstractMesh((16, 16), ("data", "model")),
-    "pod2x16x16": AbstractMesh((2, 16, 16), ("pod", "data", "model")),
+    "pod16x16": abstract_mesh((16, 16), ("data", "model")),
+    "pod2x16x16": abstract_mesh((2, 16, 16), ("pod", "data", "model")),
 }
 
 
