@@ -14,37 +14,49 @@ from repro.core import (Kernel, Pipeline, ReplicaExchange,
                         SimulationAnalysisLoop, SingleClusterEnvironment)
 
 SCALES = (24, 48, 96, 192)
+SIM_TASK_SECONDS = 0.05      # modeled task duration for --sim (DES) runs
+
+
+def _sim(k: Kernel, sim_mode: bool) -> Kernel:
+    if sim_mode:
+        k.sim_duration = SIM_TASK_SECONDS
+    return k
 
 
 class CCPipeline(Pipeline):
+    sim_mode = False
+
     def stage_1(self, i):
-        return CharCountApp.mkfile_kernel(i)
+        return _sim(CharCountApp.mkfile_kernel(i), self.sim_mode)
 
     def stage_2(self, i):
-        return CharCountApp.ccount_kernel(i)
+        return _sim(CharCountApp.ccount_kernel(i), self.sim_mode)
 
 
 class CCRE(ReplicaExchange):
     """Two-stage toy as one RE cycle: md=mkfile, exchange=aggregate ccount."""
+    sim_mode = False
 
     def prepare_replica_for_md(self, r):
-        return CharCountApp.mkfile_kernel(r.id)
+        return _sim(CharCountApp.mkfile_kernel(r.id), self.sim_mode)
 
     def prepare_exchange(self, replicas):
-        k = Kernel("misc.ccount")
-        return k
+        return _sim(Kernel("misc.ccount"), self.sim_mode)
 
 
 class CCSAL(SimulationAnalysisLoop):
+    sim_mode = False
+
     def simulation_stage(self, it, i):
-        return CharCountApp.mkfile_kernel(i)
+        return _sim(CharCountApp.mkfile_kernel(i), self.sim_mode)
 
     def analysis_stage(self, it, j):
-        return CharCountApp.ccount_kernel(j)
+        return _sim(CharCountApp.ccount_kernel(j), self.sim_mode)
 
 
-def run(scales=SCALES) -> list:
+def run(scales=SCALES, mode: str = "real") -> list:
     rows = []
+    CCPipeline.sim_mode = CCRE.sim_mode = CCSAL.sim_mode = (mode == "sim")
     for n in scales:
         for pname, make in (
                 ("pipeline", lambda: CCPipeline(stages=2, instances=n)),
@@ -53,10 +65,13 @@ def run(scales=SCALES) -> list:
                                       simulation_instances=n,
                                       analysis_instances=n))):
             cl = SingleClusterEnvironment(resource="local.cpu", cores=n,
-                                          walltime=10)
+                                          walltime=10, mode=mode)
             cl.allocate()
             prof = cl.run(make())
             cl.deallocate()
+            if prof.n_failed or prof.n_canceled:
+                raise SystemExit(f"{pname}@{n}: {prof.n_failed} failed, "
+                                 f"{prof.n_canceled} canceled")
             rows.append({"pattern": pname, "tasks_cores": n,
                          "n_tasks": prof.n_tasks,
                          **{k: round(v, 6) for k, v in
@@ -66,8 +81,8 @@ def run(scales=SCALES) -> list:
     return rows
 
 
-def main(fast: bool = False):
-    rows = run((24, 48) if fast else SCALES)
+def main(fast: bool = False, mode: str = "real"):
+    rows = run((24, 48) if fast else SCALES, mode=mode)
     save_results("fig5_patterns", rows)
     print_csv("fig5_patterns", rows,
               ["pattern", "tasks_cores", "ttc", "t_exec",
@@ -77,4 +92,11 @@ def main(fast: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="small scales only (CI smoke)")
+    ap.add_argument("--sim", action="store_true",
+                    help="DES mode: modeled task durations, real overheads")
+    args = ap.parse_args()
+    main(fast=args.fast, mode="sim" if args.sim else "real")

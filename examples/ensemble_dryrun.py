@@ -2,9 +2,12 @@
 replica-exchange member gets ONE POD as its slot (submesh), and the member's
 distributed train step is lowered+compiled against that submesh.
 
-This is the paper's core decoupling at production scale: the resource
-handler acquires 512 chips once; the ensemble layer schedules members onto
-pod-sized slots; each member is itself a 256-chip SPMD program.
+This is the paper's core decoupling at production scale, expressed through
+the PST API: the resource handler acquires 512 chips once; a SlotTopology
+carves them into pod-sized slots; the PST AppManager schedules one member
+task per slot, and each task builds its 256-chip mesh from the slot ids the
+scheduler granted it — ``ctx["submesh"]`` is ``PilotRuntime.submesh_for``
+of the running task, so placement is decided by the pilot, not the member.
 
     PYTHONPATH=src python examples/ensemble_dryrun.py
 """
@@ -15,49 +18,76 @@ import time
 
 import jax
 from repro.configs import SHAPES, get_config, input_specs
+from repro.core import AppManager, Kernel, PipelineSpec, Stage, TaskSpec
+from repro.core.kernel_plugin import register_kernel
 from repro.dist.sharding import batch_shardings, state_shardings
 from repro.dist.topology import SlotTopology
 from repro.launch.mesh import make_production_mesh
+from repro.runtime.executor import PilotRuntime
 from repro.train import build_train_step, train_state_specs
 
 
-def pod_submeshes(mesh):
-    """Split the (pod, data, model) pilot mesh into per-pod slots."""
-    topo = SlotTopology.from_mesh(mesh, slot_axis="pod")
-    return [topo.submesh([i]) for i in range(topo.n_slots)]
+@register_kernel("dryrun.compile_member",
+                 description="lower+compile one RE member on its granted "
+                             "pod submesh")
+def compile_member(args, ctx):
+    sub = ctx["submesh"]          # the pod the pilot granted this member
+    cfg = get_config(args["arch"])
+    shape = SHAPES[args["shape"]]
+    t0 = time.time()
+    st_specs = train_state_specs(cfg)
+    st_sh = state_shardings(cfg, sub, st_specs)
+    b_specs = input_specs(cfg, shape)
+    b_sh = batch_shardings(cfg, sub, b_specs, "train")
+    step = build_train_step(cfg, sub)
+    compiled = jax.jit(step, in_shardings=(st_sh, b_sh),
+                       out_shardings=(st_sh, None),
+                       donate_argnums=(0,)).lower(
+                           st_specs, b_specs).compile()
+    ma = compiled.memory_analysis()
+    devs = sub.devices.ravel()
+    return {"member": int(args["member"]),
+            "devices": (int(devs[0].id), int(devs[-1].id)),
+            "compile_s": time.time() - t0,
+            "arg_mb_per_chip": ma.argument_size_in_bytes / 1e6,
+            "temp_gb_per_chip": ma.temp_size_in_bytes / 1e9}
 
 
 def main():
     pilot_mesh = make_production_mesh(multi_pod=True)
     print(f"pilot: {pilot_mesh.devices.size} chips, axes "
           f"{pilot_mesh.axis_names} {dict(pilot_mesh.shape)}")
-    slots = pod_submeshes(pilot_mesh)
-    print(f"slots: {len(slots)} pods x {slots[0].devices.size} chips")
+    topo = SlotTopology.from_mesh(pilot_mesh, slot_axis="pod")
+    print(f"slots: {topo.n_slots} pods x {topo.devices_per_slot} chips")
+    runtime = PilotRuntime(mode="real", topology=topo)
 
-    cfg = get_config("gemma2-2b")
-    shape = SHAPES["train_4k"]
+    # one RE member per pod slot: the scheduler grants each task a slot id
+    # and the kernel compiles the member's 256-chip train step against
+    # runtime.submesh_for(task) (different pods -> different devices)
+    def member_kernel(i):
+        k = Kernel("dryrun.compile_member")
+        k.arguments = {"arch": "gemma2-2b", "shape": "train_4k", "member": i}
+        return k
 
-    # one RE member per pod: lower + compile the member's 256-chip train
-    # step against its own submesh (different pods -> different devices)
-    for i, sub in enumerate(slots):
-        t0 = time.time()
-        st_specs = train_state_specs(cfg)
-        st_sh = state_shardings(cfg, sub, st_specs)
-        b_specs = input_specs(cfg, shape)
-        b_sh = batch_shardings(cfg, sub, b_specs, "train")
-        step = build_train_step(cfg, sub)
-        compiled = jax.jit(step, in_shardings=(st_sh, b_sh),
-                           out_shardings=(st_sh, None),
-                           donate_argnums=(0,)).lower(
-                               st_specs, b_specs).compile()
-        ma = compiled.memory_analysis()
-        devs = sub.devices.ravel()
-        print(f"member {i}: pod devices [{devs[0].id}..{devs[-1].id}] "
-              f"compiled in {time.time()-t0:.0f}s; "
-              f"args {ma.argument_size_in_bytes/1e6:.0f} MB/chip, "
-              f"temp {ma.temp_size_in_bytes/1e9:.2f} GB/chip")
-    print("ensemble-of-pods dry-run OK: members are disjoint 256-chip "
-          "SPMD programs under one pilot")
+    md = Stage([TaskSpec(member_kernel(i), name=f"member{i}",
+                         metadata={"instance": i})
+                for i in range(topo.n_slots)], name="simulation")
+    am = AppManager(runtime)
+    prof = am.run(PipelineSpec([md], name="re_dryrun"))
+    assert prof.n_failed == 0 and prof.n_canceled == 0, [
+        (t.name, t.state.value, t.error)
+        for t in am.session.graph.tasks.values() if t.error]
+
+    for i in range(topo.n_slots):
+        r = prof.results["tasks"][f"member{i}"]
+        print(f"member {r['member']}: pod devices "
+              f"[{r['devices'][0]}..{r['devices'][1]}] "
+              f"compiled in {r['compile_s']:.0f}s; "
+              f"args {r['arg_mb_per_chip']:.0f} MB/chip, "
+              f"temp {r['temp_gb_per_chip']:.2f} GB/chip")
+    print(f"ensemble-of-pods dry-run OK: {prof.n_tasks} members ran as "
+          "disjoint 256-chip SPMD programs under one pilot "
+          f"(utilization {prof.utilization:.2f})")
 
 
 if __name__ == "__main__":

@@ -54,13 +54,14 @@ def metropolis_swap_device(losses, temps, cycle, key):
     partner = jnp.clip(partner, 0, n - 1)
     e_i, e_j = losses, losses[partner]
     t_i, t_j = temps, temps[partner]
+    # d is symmetric in the pair: swapping (i, j) negates both factors, so
+    # each member computes the same acceptance exponent as its partner
     d = (e_i - e_j) * (1.0 / t_i - 1.0 / t_j)
     u = jax.random.uniform(key, (n,), minval=1e-12)
-    # decision made by the left member of each pair, mirrored to the right
-    dec_idx = jnp.where(is_left, idx, partner)
-    accept_left = jnp.log(u)[dec_idx] < jnp.where(is_left, d, -d) * \
-        jnp.where(is_left, 1.0, -1.0)
-    accept = valid & jnp.where(is_left, accept_left, accept_left)
+    # both members read the pair leader's (left member's) uniform draw, so
+    # the accept decision is mirrored exactly across the pair
+    leader = jnp.where(is_left, idx, partner)
+    accept = valid & (jnp.log(u)[leader] < d)
     new_temps = jnp.where(accept, temps[partner], temps)
     return new_temps, jnp.sum(accept) // 2
 

@@ -1,113 +1,51 @@
-"""Execution plugins (paper §3.2 component 4): bind a pattern's kernels into
-executable units (Tasks) and submit them to the pilot runtime.
+"""Execution plugins (paper §3.2 component 4): compile a legacy hook-API
+pattern into PST pipelines (core/pst.py) and run them on an AppManager.
 
 One plugin per pattern.  The plugin is the ONLY component that sees both the
 pattern structure and the runtime — patterns stay execution-agnostic, the
-runtime stays pattern-agnostic.  The plugin also assembles the paper's TTC
-decomposition:  TTC = T_EnMD(core+pattern+rts) + T_exec + T_data.
+runtime stays pattern-agnostic.  Since the PST redesign the plugin no longer
+drives per-cycle TaskGraphs itself: it emits ``PipelineSpec`` objects whose
+``on_done`` callbacks reproduce the pattern's control flow (apply_exchange,
+should_continue, ...) adaptively, and one long-lived runtime session
+executes everything.  The paper's TTC decomposition
+(TTC = T_EnMD(core+pattern+rts) + T_exec + T_data) is assembled by the
+AppManager; utilization is computed once over the whole run from
+accumulated busy slot-seconds (it used to be overwritten per cycle, so
+RE/SAL reported only the last cycle's utilization).
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import List
 
-from repro.core.kernel_plugin import Kernel
 from repro.core.patterns import (BagOfTasks, ExecutionPattern, Pipeline,
                                  ReplicaExchange, SimulationAnalysisLoop)
+from repro.core.pst import (AppManager, ExecutionProfile, PipelineSpec,
+                            Stage, TaskSpec)
 from repro.core.resource_handler import Pilot
-from repro.runtime.states import Task, TaskGraph, TaskState
 
-
-@dataclass
-class ExecutionProfile:
-    """Paper eq. (1)-(2)."""
-    ttc: float = 0.0
-    t_exec: float = 0.0
-    t_data: float = 0.0
-    t_core_overhead: float = 0.0
-    t_pattern_overhead: float = 0.0
-    t_rts_overhead: float = 0.0
-    n_tasks: int = 0
-    n_failed: int = 0
-    n_retries: int = 0
-    n_speculative: int = 0
-    utilization: float = 0.0
-    per_stage: Dict[str, Dict[str, float]] = field(default_factory=dict)
-    results: Dict[str, Any] = field(default_factory=dict)
-
-    @property
-    def t_enmd_overhead(self) -> float:
-        return (self.t_core_overhead + self.t_pattern_overhead
-                + self.t_rts_overhead)
-
-    def summary(self) -> Dict[str, float]:
-        return {"ttc": self.ttc, "t_exec": self.t_exec,
-                "t_data": self.t_data,
-                "t_core_overhead": self.t_core_overhead,
-                "t_pattern_overhead": self.t_pattern_overhead,
-                "t_rts_overhead": self.t_rts_overhead,
-                "n_tasks": self.n_tasks, "n_failed": self.n_failed,
-                "utilization": self.utilization}
+__all__ = ["ExecutionProfile", "BaseExecutionPlugin",
+           "PipelineExecutionPlugin", "REExecutionPlugin",
+           "SALExecutionPlugin", "get_plugin"]
 
 
 class BaseExecutionPlugin:
+    """Compile ``self.pattern`` to PST pipelines, then run them."""
+
     def __init__(self, pattern: ExecutionPattern, pilot: Pilot):
         self.pattern = pattern
         self.pilot = pilot
         self.profile = ExecutionProfile()
-        self._kernels: Dict[str, Kernel] = {}
 
-    # ------------------------------------------------------------ helpers
-    def _make_task(self, kernel: Kernel, name: str, *, deps=(), stage="",
-                   instance: int = 0, iteration: int = 0) -> Task:
-        self._kernels[name] = kernel
-
-        def run(task: Task, _k=kernel):
-            ctx = {"pilot": self.pilot, "task": task,
-                   "dep_results": task.meta.get("dep_results", {})}
-            return _k.execute(ctx)
-
-        return Task(
-            name=name,
-            run=run if self.pilot.runtime.mode == "real" else None,
-            duration=(kernel.sim_duration or 0.0),
-            slots=kernel.cores,
-            deps=list(deps),
-            stage=stage, instance=instance, iteration=iteration,
-            idempotent=kernel.idempotent)
-
-    def _run_graph(self, graph: TaskGraph):
-        rp = self.pilot.runtime.run(graph)
-        self.profile.ttc += rp.ttc
-        self.profile.t_exec += rp.t_exec
-        self.profile.t_rts_overhead += rp.t_rts_overhead
-        self.profile.n_tasks += rp.n_tasks
-        self.profile.n_failed += rp.n_failed
-        self.profile.n_retries += rp.n_retries
-        self.profile.n_speculative += rp.n_speculative
-        # data staging time comes from the kernels themselves
-        for name, k in list(self._kernels.items()):
-            if name in graph.tasks:
-                self.profile.t_data += (k.timings["data_in"]
-                                        + k.timings["data_out"])
-        busy = rp.slot_busy
-        denom = max(rp.ttc, 1e-12) * max(self.pilot.slots, 1)
-        self.profile.utilization = busy / denom
-        return rp
-
-    def _stage_stats(self, graph: TaskGraph):
-        for t in graph.tasks.values():
-            st = self.profile.per_stage.setdefault(
-                t.stage, {"n": 0, "t_exec": 0.0})
-            st["n"] += 1
-            if self.pilot.runtime.mode == "sim":
-                st["t_exec"] += t.duration
-            else:
-                st["t_exec"] += max(t.t_finished - t.t_started, 0.0)
+    def compile(self) -> List[PipelineSpec]:
+        raise NotImplementedError
 
     def execute(self) -> ExecutionProfile:
-        raise NotImplementedError
+        t0 = time.perf_counter()
+        pipelines = self.compile()
+        self.profile.t_pattern_overhead += time.perf_counter() - t0
+        AppManager(self.pilot, profile=self.profile).run(pipelines)
+        return self.profile
 
 
 # ---------------------------------------------------------------- pipeline
@@ -115,25 +53,20 @@ class BaseExecutionPlugin:
 class PipelineExecutionPlugin(BaseExecutionPlugin):
     pattern_cls = Pipeline
 
-    def execute(self) -> ExecutionProfile:
-        t0 = time.perf_counter()
+    def compile(self) -> List[PipelineSpec]:
         pat: Pipeline = self.pattern
-        graph = TaskGraph()
+        pipes = []
+        # one PST pipeline per pipe instance: pipes advance independently
+        # (a slow pipe never blocks another pipe's later stages)
         for p in range(pat.instances):
-            prev = None
-            for s in range(1, pat.stages + 1):
-                k = pat.stage_kernel(s, p)
-                name = f"pipe{p:05d}.stage{s}"
-                graph.add(self._make_task(
-                    k, name, deps=[prev] if prev else [],
-                    stage=f"stage{s}", instance=p))
-                prev = name
-        self.profile.t_pattern_overhead += time.perf_counter() - t0
-        self._run_graph(graph)
-        self._stage_stats(graph)
-        self.profile.results["tasks"] = {
-            n: t.result for n, t in graph.tasks.items()}
-        return self.profile
+            stages = [
+                Stage([TaskSpec(pat.stage_kernel(s, p),
+                                name=f"pipe{p:05d}.stage{s}",
+                                metadata={"instance": p})],
+                      name=f"stage{s}")
+                for s in range(1, pat.stages + 1)]
+            pipes.append(PipelineSpec(stages, name=f"pipe{p:05d}"))
+        return pipes
 
 
 # ---------------------------------------------------------------- replica
@@ -141,35 +74,39 @@ class PipelineExecutionPlugin(BaseExecutionPlugin):
 class REExecutionPlugin(BaseExecutionPlugin):
     pattern_cls = ReplicaExchange
 
-    def execute(self) -> ExecutionProfile:
+    def compile(self) -> List[PipelineSpec]:
         pat: ReplicaExchange = self.pattern
-        for c in range(pat.cycles):
-            t0 = time.perf_counter()
-            graph = TaskGraph()
-            sim_names = []
-            for r in pat.replicas:
-                k = pat.prepare_replica_for_md(r)
-                name = f"cycle{c:04d}.md{r.id:05d}"
-                graph.add(self._make_task(k, name, stage="simulation",
-                                          instance=r.id, iteration=c))
-                sim_names.append(name)
-            xk = pat.prepare_exchange(pat.replicas)
+        prof = self.profile
+
+        def cycle_stages(c: int) -> List[Stage]:
+            sims = Stage(
+                [TaskSpec(pat.prepare_replica_for_md(r),
+                          name=f"cycle{c:04d}.md{r.id:05d}",
+                          metadata={"instance": r.id, "iteration": c})
+                 for r in pat.replicas],
+                name="simulation")
             xname = f"cycle{c:04d}.exchange"
-            graph.add(self._make_task(xk, xname, deps=sim_names,
-                                      stage="exchange", iteration=c))
-            self.profile.t_pattern_overhead += time.perf_counter() - t0
 
-            self._run_graph(graph)
-            self._stage_stats(graph)
+            def on_exchange(stage: Stage, pipe: PipelineSpec):
+                xres = stage.results[xname]
+                pat.apply_exchange(xres, pat.replicas)
+                for r in pat.replicas:
+                    r.cycle += 1
+                prof.results[f"exchange_{c}"] = xres
+                if c + 1 < pat.cycles:
+                    # next cycle's kernels are prepared only now, AFTER the
+                    # exchange was applied — the PST adaptivity hook
+                    pipe.extend(cycle_stages(c + 1))
 
-            t1 = time.perf_counter()
-            xres = graph.tasks[xname].result
-            pat.apply_exchange(xres, pat.replicas)
-            for r in pat.replicas:
-                r.cycle += 1
-            self.profile.t_pattern_overhead += time.perf_counter() - t1
-            self.profile.results[f"exchange_{c}"] = xres
-        return self.profile
+            exchange = Stage(
+                [TaskSpec(pat.prepare_exchange(pat.replicas), name=xname,
+                          metadata={"iteration": c})],
+                name="exchange", on_done=on_exchange)
+            return [sims, exchange]
+
+        if pat.cycles <= 0:
+            return [PipelineSpec([], name="re")]
+        return [PipelineSpec(cycle_stages(0), name="re")]
 
 
 # ---------------------------------------------------------------- SAL
@@ -177,55 +114,56 @@ class REExecutionPlugin(BaseExecutionPlugin):
 class SALExecutionPlugin(BaseExecutionPlugin):
     pattern_cls = SimulationAnalysisLoop
 
-    def execute(self) -> ExecutionProfile:
+    def compile(self) -> List[PipelineSpec]:
         pat: SimulationAnalysisLoop = self.pattern
+        prof = self.profile
 
-        t0 = time.perf_counter()
+        def finale() -> List[Stage]:
+            post = pat.post_loop()
+            if post is None:
+                return []
+            return [Stage([TaskSpec(post, name="post_loop")],
+                          name="post_loop")]
+
+        def iter_stages(it: int) -> List[Stage]:
+            sims = Stage(
+                [TaskSpec(pat.simulation_stage(it, i),
+                          name=f"iter{it:04d}.sim{i:05d}",
+                          metadata={"instance": i, "iteration": it})
+                 for i in range(pat.simulation_instances)],
+                name="simulation")
+            ana_names = [f"iter{it:04d}.ana{j:05d}"
+                         for j in range(pat.analysis_instances)]
+
+            def on_analysis(stage: Stage, pipe: PipelineSpec):
+                results = [stage.results[n] for n in ana_names]
+                prof.results[f"analysis_{it}"] = results
+                # legacy called should_continue on EVERY iteration, the
+                # last included — keep that call parity (subclasses may
+                # track convergence state in it)
+                cont = pat.should_continue(it, results)
+                if cont and it + 1 < pat.maxiterations:
+                    pipe.extend(iter_stages(it + 1))
+                else:
+                    pipe.extend(finale())
+
+            analysis = Stage(
+                [TaskSpec(pat.analysis_stage(it, j), name=n,
+                          metadata={"instance": j, "iteration": it})
+                 for j, n in enumerate(ana_names)],
+                name="analysis", on_done=on_analysis)
+            return [sims, analysis]
+
+        stages: List[Stage] = []
         pre = pat.pre_loop()
-        self.profile.t_pattern_overhead += time.perf_counter() - t0
         if pre is not None:
-            g = TaskGraph()
-            g.add(self._make_task(pre, "pre_loop", stage="pre_loop"))
-            self._run_graph(g)
-            self._stage_stats(g)
-
-        for it in range(pat.maxiterations):
-            t0 = time.perf_counter()
-            graph = TaskGraph()
-            sims = []
-            for i in range(pat.simulation_instances):
-                k = pat.simulation_stage(it, i)
-                name = f"iter{it:04d}.sim{i:05d}"
-                graph.add(self._make_task(k, name, stage="simulation",
-                                          instance=i, iteration=it))
-                sims.append(name)
-            ana = []
-            for j in range(pat.analysis_instances):
-                k = pat.analysis_stage(it, j)
-                name = f"iter{it:04d}.ana{j:05d}"
-                graph.add(self._make_task(k, name, deps=sims,
-                                          stage="analysis", instance=j,
-                                          iteration=it))
-                ana.append(name)
-            self.profile.t_pattern_overhead += time.perf_counter() - t0
-
-            self._run_graph(graph)
-            self._stage_stats(graph)
-
-            results = [graph.tasks[n].result for n in ana]
-            self.profile.results[f"analysis_{it}"] = results
-            if not pat.should_continue(it, results):
-                break
-
-        t0 = time.perf_counter()
-        post = pat.post_loop()
-        self.profile.t_pattern_overhead += time.perf_counter() - t0
-        if post is not None:
-            g = TaskGraph()
-            g.add(self._make_task(post, "post_loop", stage="post_loop"))
-            self._run_graph(g)
-            self._stage_stats(g)
-        return self.profile
+            stages.append(Stage([TaskSpec(pre, name="pre_loop")],
+                                name="pre_loop"))
+        if pat.maxiterations > 0:
+            stages += iter_stages(0)
+        else:
+            stages += finale()
+        return [PipelineSpec(stages, name="sal")]
 
 
 _PLUGINS = [PipelineExecutionPlugin, REExecutionPlugin, SALExecutionPlugin]

@@ -1,11 +1,16 @@
-"""Execution patterns (the paper's §3.4): Pipeline, Replica Exchange,
+"""Legacy execution patterns (the paper's §3.4): Pipeline, Replica Exchange,
 Simulation-Analysis Loop, plus BagOfTasks.
 
 A pattern is a parameterized control-flow template; users subclass and fill
 stage methods with Kernel plugins (paper listings 1/4/5).  Patterns compile
-to a TaskGraph via their execution plugin — the pattern itself never touches
-execution details (paper design decision: "decouple what to execute from how
-to execute").
+to PST pipelines (core/pst.py) via their execution plugin — the pattern
+itself never touches execution details (paper design decision: "decouple
+what to execute from how to execute").
+
+New code should use the PST API directly (``AppManager``, ``PipelineSpec``,
+``Stage``, ``TaskSpec``): it expresses everything these templates do plus
+adaptive and coupled workloads they cannot (see the migration table in
+repro/core/__init__.py).
 """
 from __future__ import annotations
 

@@ -1,0 +1,336 @@
+"""Composable Pipeline-Stage-Task (PST) workflow API.
+
+The seed mirrored the 2016 toolkit's subclass-hook pattern API
+(``stage_1..stage_M`` via getattr, ``prepare_*`` overrides).  The second
+generation toolkit ("Harnessing the Power of Many", arXiv:1710.08491)
+replaced those hardcoded patterns with composable *data objects* because the
+hook API structurally cannot express adaptive or coupled ensembles.  This
+module is that redesign:
+
+  TaskSpec      one executable unit: a bound Kernel + placement metadata.
+  Stage         a set of concurrent TaskSpecs + an ``on_done`` adaptivity
+                callback that may append stages or mutate the downstream
+                pipeline when the stage completes.
+  PipelineSpec  an ordered list of Stages; stage k+1 starts when stage k
+                finishes (a per-pipeline barrier — never a global one).
+  AppManager    executes many pipelines concurrently over ONE long-lived
+                PilotRuntime session (runtime/executor.RuntimeSession) with
+                dynamic task injection: when a stage of pipeline A
+                completes, A's next stage is submitted immediately, while
+                pipeline B's tasks are still running.
+
+Quickstart::
+
+    sim = Stage([TaskSpec(k) for k in member_kernels], name="sim")
+    def adapt(stage, pipe):
+        if needs_more_sampling(stage.results):
+            pipe.add_stage(make_refinement_stage(stage.results))
+    ana = Stage([TaskSpec(ana_kernel)], name="analysis", on_done=adapt)
+    profile = AppManager(pilot).run([PipelineSpec([sim, ana], name="e0"),
+                                     PipelineSpec([...], name="e1")])
+
+The legacy patterns (Pipeline, BagOfTasks, ReplicaExchange,
+SimulationAnalysisLoop) still work: their execution plugins are now thin
+compilers from the hook API to PST (see core/execution_plugin.py).
+
+Placement: tasks land on mesh slots via ``PilotRuntime.submesh_for`` — in
+real mode a kernel's ``ctx["submesh"]`` is the jax Mesh over the devices of
+the slots the scheduler granted to its task (requires the runtime to be
+built with a ``SlotTopology``).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Union
+
+from repro.core.kernel_plugin import Kernel
+from repro.runtime.states import Task, TaskState
+
+
+@dataclass
+class ExecutionProfile:
+    """Paper eq. (1)-(2): TTC = T_exec + T_data + T_EnMD(core+pattern+rts)."""
+    ttc: float = 0.0
+    t_exec: float = 0.0
+    t_data: float = 0.0
+    t_core_overhead: float = 0.0
+    t_pattern_overhead: float = 0.0
+    t_rts_overhead: float = 0.0
+    n_tasks: int = 0
+    n_failed: int = 0
+    n_canceled: int = 0
+    n_retries: int = 0
+    n_speculative: int = 0
+    # busy slot-seconds accumulate here so utilization can be computed over
+    # the WHOLE run at the end (not overwritten per cycle — that bug made
+    # RE/SAL report only the last cycle's utilization)
+    slot_busy: float = 0.0
+    utilization: float = 0.0
+    per_stage: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    results: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def t_enmd_overhead(self) -> float:
+        return (self.t_core_overhead + self.t_pattern_overhead
+                + self.t_rts_overhead)
+
+    def summary(self) -> Dict[str, float]:
+        return {"ttc": self.ttc, "t_exec": self.t_exec,
+                "t_data": self.t_data,
+                "t_core_overhead": self.t_core_overhead,
+                "t_pattern_overhead": self.t_pattern_overhead,
+                "t_rts_overhead": self.t_rts_overhead,
+                "n_tasks": self.n_tasks, "n_failed": self.n_failed,
+                "utilization": self.utilization}
+
+
+# ------------------------------------------------------------------ objects
+
+@dataclass
+class TaskSpec:
+    """Kernel + slots + metadata: what to run, how wide, and labels.
+
+    ``name`` (optional) becomes the runtime task name verbatim — callers
+    providing names are responsible for global uniqueness; unnamed specs get
+    ``<pipeline>.<stage_idx>.<stage>.<index>`` (unique even when adaptive
+    extension reuses a stage name).  Slot width comes from ``kernel.cores``.
+    ``metadata`` keys ``instance`` and ``iteration`` land on the Task record
+    (profiling labels); everything else rides along in ``task.meta``.
+    """
+    kernel: Kernel
+    name: str = ""
+    metadata: Dict[str, Any] = field(default_factory=dict)
+
+
+class Stage:
+    """A set of concurrent tasks; completes when all of them are terminal.
+
+    ``on_done(stage, pipeline)`` fires once at completion (only if no task
+    failed) and may mutate the downstream graph: append stages via
+    ``pipeline.add_stage`` / ``pipeline.extend`` or return an iterable of
+    new stages.  ``stage.results`` maps task name -> result.
+    """
+
+    def __init__(self, tasks: Iterable[Union[TaskSpec, Kernel]] = (), *,
+                 name: str = "",
+                 on_done: Optional[Callable[["Stage", "PipelineSpec"],
+                                            Any]] = None):
+        self.name = name
+        self.tasks: List[TaskSpec] = [
+            t if isinstance(t, TaskSpec) else TaskSpec(t) for t in tasks]
+        self.on_done = on_done
+        self.results: Dict[str, Any] = {}
+        self.n_failed = 0
+
+    def add(self, task: Union[TaskSpec, Kernel]) -> TaskSpec:
+        spec = task if isinstance(task, TaskSpec) else TaskSpec(task)
+        self.tasks.append(spec)
+        return spec
+
+    def __repr__(self):
+        return f"Stage({self.name!r}, {len(self.tasks)} tasks)"
+
+
+class PipelineSpec:
+    """Ordered stages executed with a per-pipeline barrier between them.
+
+    The stage list may grow while the pipeline runs (adaptivity): appending
+    from an ``on_done`` callback extends this pipeline without touching any
+    other pipeline running on the same AppManager.
+    """
+
+    def __init__(self, stages: Iterable[Stage] = (), *, name: str = ""):
+        self.name = name
+        self.stages: List[Stage] = list(stages)
+
+    def add_stage(self, stage: Stage) -> Stage:
+        self.stages.append(stage)
+        return stage
+
+    def extend(self, stages: Iterable[Stage]):
+        self.stages.extend(stages)
+
+    def __repr__(self):
+        return f"PipelineSpec({self.name!r}, {len(self.stages)} stages)"
+
+
+# ------------------------------------------------------------------ manager
+
+class _PipelineRun:
+    """Execution-time state of one pipeline on an AppManager."""
+
+    def __init__(self, spec: PipelineSpec, name: str):
+        self.spec = spec
+        self.name = name
+        self.idx = -1                 # index of the currently running stage
+        self.state = "pending"        # pending | running | done | failed
+        self.pending: set = set()     # outstanding task names, current stage
+        self.stage_task_names: List[List[str]] = []
+
+
+class AppManager:
+    """Run many PST pipelines concurrently over one pilot session.
+
+    Accepts a ``Pilot`` (core.resource_handler) or a bare ``PilotRuntime``.
+    All pipelines share the runtime's slots; each advances independently —
+    stage k+1 of pipeline A is injected into the live session the moment
+    stage k completes, regardless of what B is doing (no global barrier, no
+    per-cycle graph teardown).
+    """
+
+    def __init__(self, pilot, *, profile: Optional[ExecutionProfile] = None):
+        if hasattr(pilot, "runtime"):
+            self.pilot = pilot
+            self.runtime = pilot.runtime
+        else:
+            self.pilot = None
+            self.runtime = pilot
+        self.profile = profile if profile is not None else ExecutionProfile()
+        self._kernels: Dict[str, Kernel] = {}
+        self._task_index: Dict[str, _PipelineRun] = {}
+        self._stage_of: Dict[str, Stage] = {}
+        self.session = None            # live RuntimeSession while running
+        self.pipeline_runs: Dict[str, _PipelineRun] = {}
+
+    # ------------------------------------------------------------ build
+    def _make_run(self, kernel: Kernel):
+        if self.runtime.mode != "real":
+            return None
+
+        def run(task: Task, _k=kernel):
+            ctx = {"pilot": self.pilot, "runtime": self.runtime,
+                   "task": task,
+                   "dep_results": task.meta.get("dep_results", {})}
+            if self.runtime.topology is not None \
+                    and task.meta.get("slot_ids"):
+                ctx["submesh"] = self.runtime.submesh_for(task)
+            return _k.execute(ctx)
+
+        return run
+
+    def _build_task(self, spec: TaskSpec, pr: _PipelineRun, stage: Stage,
+                    stage_idx: int, j: int, deps: List[str]) -> Task:
+        k = spec.kernel
+        stage_label = stage.name or f"stage{stage_idx}"
+        # stage_idx keeps auto-names unique when a stage NAME repeats
+        # across appended cycles (the adaptive extension pattern)
+        name = spec.name or f"{pr.name}.{stage_idx:04d}.{stage_label}.{j:05d}"
+        t = Task(name=name, run=self._make_run(k),
+                 duration=(k.sim_duration or 0.0), slots=k.cores,
+                 deps=list(deps), stage=stage_label,
+                 instance=int(spec.metadata.get("instance", j)),
+                 iteration=int(spec.metadata.get("iteration", 0)),
+                 idempotent=k.idempotent)
+        t.meta["pipeline"] = pr.name
+        extra = {kk: v for kk, v in spec.metadata.items()
+                 if kk not in ("instance", "iteration")}
+        if extra:
+            t.meta["spec"] = extra
+        self._kernels[name] = k
+        self._task_index[name] = pr
+        self._stage_of[name] = stage
+        return t
+
+    # ------------------------------------------------------------ advance
+    def _submit_next_stage(self, pr: _PipelineRun, *, dynamic: bool):
+        """Submit pr's next stage; skips through empty (control-only)
+        stages, firing their on_done inline."""
+        while True:
+            pr.idx += 1
+            if pr.idx >= len(pr.spec.stages):
+                pr.state = "done"
+                return
+            pr.state = "running"
+            stage = pr.spec.stages[pr.idx]
+            deps = pr.stage_task_names[-1] if pr.stage_task_names else []
+            tasks = [self._build_task(spec, pr, stage, pr.idx, j, deps)
+                     for j, spec in enumerate(stage.tasks)]
+            if tasks:
+                pr.pending = {t.name for t in tasks}
+                pr.stage_task_names.append([t.name for t in tasks])
+                self.session.submit(tasks, dynamic=dynamic)
+                return
+            # empty stage: pure control point — fire on_done and continue
+            self._fire_on_done(stage, pr)
+
+    def _fire_on_done(self, stage: Stage, pr: _PipelineRun):
+        if stage.on_done is None:
+            return
+        t0 = time.perf_counter()
+        appended = stage.on_done(stage, pr.spec)
+        if appended:
+            pr.spec.extend(appended)
+        self.profile.t_pattern_overhead += time.perf_counter() - t0
+
+    def _on_task(self, task: Task, session):
+        pr = self._task_index.get(task.name)
+        if pr is None:
+            return
+        stage = self._stage_of[task.name]
+        prof = self.profile
+        if task.attempts:                 # executed (possibly failed): its
+            k = self._kernels[task.name]  # staging/exec time is real cost
+            prof.t_data += k.timings["data_in"] + k.timings["data_out"]
+        st = prof.per_stage.setdefault(task.stage, {"n": 0, "t_exec": 0.0})
+        st["n"] += 1
+        st["t_exec"] += (task.duration if self.runtime.mode == "sim"
+                         else max(task.t_finished - task.t_started, 0.0))
+        if task.state == TaskState.DONE:
+            stage.results[task.name] = task.result
+            prof.results.setdefault("tasks", {})[task.name] = task.result
+        else:
+            stage.n_failed += 1
+        pr.pending.discard(task.name)
+        if pr.pending:
+            return
+        # stage complete
+        if stage.n_failed:
+            pr.state = "failed"
+            return
+        self._fire_on_done(stage, pr)
+        self._submit_next_stage(pr, dynamic=True)
+
+    # ------------------------------------------------------------ run
+    def run(self, pipelines: Union[PipelineSpec, Iterable[PipelineSpec]]
+            ) -> ExecutionProfile:
+        """Execute the pipelines to completion; returns the aggregate
+        profile (cumulative if a profile was passed in)."""
+        pipes = ([pipelines] if isinstance(pipelines, PipelineSpec)
+                 else list(pipelines))
+        t0 = time.perf_counter()
+        prof = self.profile
+        runs = []
+        for p in pipes:
+            name = p.name or f"p{len(self.pipeline_runs):04d}"
+            if name in self.pipeline_runs:
+                raise ValueError(f"duplicate pipeline name {name!r}")
+            pr = _PipelineRun(p, name)
+            self.pipeline_runs[name] = pr
+            runs.append(pr)
+        prof.t_pattern_overhead += time.perf_counter() - t0
+
+        self.session = self.runtime.session(on_task_done=self._on_task)
+        for pr in runs:
+            self._submit_next_stage(pr, dynamic=False)
+        rp = self.session.drain()
+
+        prof.ttc += rp.ttc
+        prof.t_exec += rp.t_exec
+        prof.t_rts_overhead += rp.t_rts_overhead
+        prof.n_tasks += rp.n_tasks
+        prof.n_failed += rp.n_failed
+        prof.n_canceled += rp.n_canceled
+        prof.n_retries += rp.n_retries
+        prof.n_speculative += rp.n_speculative
+        prof.slot_busy += rp.slot_busy
+        # utilization over the WHOLE session: busy slot-seconds / available
+        # slot-seconds (accumulated, then computed once — not per cycle)
+        prof.utilization = prof.slot_busy / (
+            max(prof.ttc, 1e-12) * max(self.runtime.slots, 1))
+        prof.results["pipelines"] = {
+            pr.name: {"state": pr.state,
+                      "n_stages": len(pr.spec.stages),
+                      "n_tasks": sum(len(ns) for ns in pr.stage_task_names)}
+            for pr in self.pipeline_runs.values()}
+        return prof

@@ -4,6 +4,13 @@ Members train at different "temperatures" (learning rates).  The exchange
 kernel gathers member losses and proposes even/odd neighbor swaps with a
 Metropolis criterion — the standard parallel-tempering move applied to the
 hyperparameter dimension (population-based training, RE-style).
+
+Placement: when the exchange task runs under a mesh-aware pilot
+(PilotRuntime built with a SlotTopology), the scheduler grants it slot
+submeshes and the PST AppManager passes ``ctx["submesh"]`` — the jax Mesh
+from ``PilotRuntime.submesh_for(task)``.  With ``args["device"]`` set, the
+swap is computed on that submesh's devices (the on-device
+``metropolis_swap_device`` path) instead of host numpy.
 """
 from __future__ import annotations
 
@@ -37,6 +44,36 @@ def metropolis_swaps(losses, temps, cycle: int, seed: int = 0):
     return temps, accepted
 
 
+def _device_swaps(losses, temps, cycle: int, seed: int, submesh):
+    """On-device swap on the exchange task's granted submesh (one member
+    per slot submesh; the exchange itself is a scalar-vector program, placed
+    on the submesh's first device)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.ensemble import metropolis_swap_device
+
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), cycle)
+    dev = next(iter(np.asarray(submesh.devices).flat)) \
+        if submesh is not None else None
+    old32 = np.asarray(temps, dtype=np.float32)
+    with jax.default_device(dev):
+        new_t, _ = metropolis_swap_device(
+            jnp.asarray(losses, jnp.float32), jnp.asarray(old32), cycle, key)
+    new32 = np.asarray(jax.device_get(new_t), dtype=np.float32)
+    # the device decides; the swap is applied host-side in float64 so
+    # temperatures stay exact across cycles (swap detection must compare in
+    # float32 — comparing against the float64 originals would flag every
+    # non-representable temperature as swapped)
+    new_temps = np.asarray(temps, dtype=np.float64).copy()
+    accepted = []
+    for i in range(cycle % 2, len(new_temps) - 1, 2):
+        if new32[i] != old32[i] or new32[i + 1] != old32[i + 1]:
+            new_temps[i], new_temps[i + 1] = new_temps[i + 1], new_temps[i]
+            accepted.append((i, i + 1))
+    return new_temps, accepted
+
+
 @register_kernel("re.exchange",
                  description="Metropolis temperature exchange over members")
 def re_exchange(args, ctx):
@@ -56,7 +93,12 @@ def re_exchange(args, ctx):
             losses[i] = float(explicit[i])
         if losses[i] is None:
             losses[i] = float("nan")
-    new_temps, accepted = metropolis_swaps(losses, temps, cycle,
-                                           int(args.get("seed", 0)))
+    if args.get("device"):
+        new_temps, accepted = _device_swaps(
+            losses, temps, cycle, int(args.get("seed", 0)),
+            ctx.get("submesh"))
+    else:
+        new_temps, accepted = metropolis_swaps(losses, temps, cycle,
+                                               int(args.get("seed", 0)))
     return {"temps": [float(t) for t in new_temps],
             "accepted": accepted, "losses": losses, "cycle": cycle}

@@ -10,9 +10,20 @@ Two modes:
          paper's overhead measurements at 2560 tasks without hours of
          wall-clock sleep.
 
+Incremental scheduling: a :class:`RuntimeSession` is a long-lived scheduling
+context over one pilot.  ``submit()`` injects tasks at any time — including
+from an ``on_task_done`` callback fired as each task completes — and
+``drain()`` runs until everything submitted is terminal.  This is what lets
+the PST ``AppManager`` (repro.core.pst) multiplex many pipelines over ONE
+pilot session with no global barrier and no per-cycle graph teardown: a
+completed exchange in ensemble A schedules A's next cycle immediately while
+ensemble B is still simulating.  ``PilotRuntime.run(graph)`` is now a thin
+wrapper: one session, one bulk submit, one drain.
+
 Fault tolerance: bounded retries with backoff; straggler mitigation via
 speculative duplicates (sim+real); elastic pilot resize mid-run; journal for
-restart.
+restart (dynamically injected tasks are journaled with a ``submitted``
+record so a restarted session can tell replayed structure from new work).
 
 Mesh-aware slots: with a ``topology`` (repro.dist.topology.SlotTopology) the
 pilot's slots are *device submeshes* — a task occupying ``slots`` pilot slots
@@ -28,8 +39,9 @@ import statistics
 import threading
 import time
 import traceback
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, Iterable, List, Optional, Union
 
 from repro.runtime.journal import Journal
 from repro.runtime.states import Task, TaskGraph, TaskState
@@ -44,6 +56,7 @@ class RuntimeProfile:
     t_rts_overhead: float = 0.0        # scheduling/dispatch (T_RP analogue)
     n_tasks: int = 0
     n_failed: int = 0
+    n_canceled: int = 0
     n_retries: int = 0
     n_speculative: int = 0
     slot_busy: float = 0.0             # aggregate busy slot-seconds
@@ -133,230 +146,364 @@ class PilotRuntime:
             raise ValueError("runtime has no device topology")
         return self.topology.submesh(t.meta["slot_ids"])
 
+    # ------------------------------------------------------------ sessions
+    def session(self, *, on_task_done: Optional[Callable] = None
+                ) -> "RuntimeSession":
+        """Open a long-lived incremental scheduling session."""
+        return RuntimeSession(self, on_task_done=on_task_done)
+
     # ------------------------------------------------------------ run
     def run(self, graph: TaskGraph) -> RuntimeProfile:
+        """Closed-world execution of a prebuilt graph (one-shot session)."""
         graph.validate()
-        skipped = self.journal.replay(graph)
-        prof = RuntimeProfile()
+        sess = RuntimeSession(self, graph=graph)
+        # journal replay from the session's (single) parse of the file
+        skipped = sum(sess._replay_task(t) for t in graph.tasks.values())
         if skipped:
-            prof.events.append({"event": "journal_skip", "n": skipped})
-        if self.mode == "sim":
-            self._run_sim(graph, prof)
+            sess.prof.events.append({"event": "journal_skip", "n": skipped})
+        return sess.drain()
+
+
+class RuntimeSession:
+    """Incremental scheduling over one pilot: ``submit()`` then ``drain()``.
+
+    The session owns the live TaskGraph, the virtual clock (sim mode), and
+    the busy-slot accounting, all of which persist across submissions.  An
+    ``on_task_done(task, session)`` callback fires from inside the drain
+    loop as each non-speculative task reaches a terminal state and may call
+    :meth:`submit` to inject downstream work — dynamic injection is what
+    turns the per-cycle barrier of the legacy plugins into streaming,
+    per-pipeline progress.  Callbacks run on the drain thread; ``submit``
+    is not thread-safe against a concurrent ``drain``.
+    """
+
+    def __init__(self, runtime: PilotRuntime, *, graph: Optional[TaskGraph]
+                 = None, on_task_done: Optional[Callable] = None):
+        self.rt = runtime
+        self.graph = graph if graph is not None else TaskGraph()
+        self.prof = RuntimeProfile()
+        self.on_task_done = on_task_done
+        self.vnow = 0.0                      # virtual clock (sim mode)
+        self._t0: Optional[float] = None     # real clock at first drain
+        self._cbq: deque = deque()           # terminal tasks awaiting callback
+        # sim-mode state (persists across drains: the clock never resets)
+        self._busy = 0
+        self._heap: List = []                # (v_finish, seq, task)
+        self._seq = 0
+        self._durations: Dict[str, List[float]] = {}
+        self._spec_launched: Dict[str, Task] = {}
+        # real-mode state
+        self._cv = threading.Condition(threading.Lock())
+        self._free = {"n": runtime.slots}
+        # workers still inside _execute_real: a task flips to a terminal
+        # state BEFORE its completion bookkeeping (callback enqueue, slot
+        # release) runs under the lock, so graph.done() alone must never
+        # end the drain loop
+        self._inflight = 0
+        # journal replay set, loaded once per session
+        self._replayed_done, self._replayed_results = \
+            runtime.journal.load_done()
+
+    # ------------------------------------------------------------ submit
+    def submit(self, tasks: Union[Task, Iterable[Task]], *,
+               dynamic: bool = False) -> List[Task]:
+        """Add tasks to the live graph.  Deps must already be in the graph
+        (earlier submission or same batch) — incremental submission is
+        therefore acyclic by construction.  Tasks recorded DONE in the
+        journal are replayed (skipped) and still fire their callback."""
+        batch = [tasks] if isinstance(tasks, Task) else list(tasks)
+        names = {t.name for t in batch}
+        skipped = 0
+        for t in batch:
+            for d in t.deps:
+                if d not in self.graph.tasks and d not in names:
+                    raise ValueError(f"{t.name}: unknown dep {d}")
+            self.graph.add(t)
+            if dynamic:
+                self.rt.journal.record(t, "submitted", dynamic=True)
+            if self._replay_task(t):
+                skipped += 1
+                self._queue_callback(t)
+        if skipped:
+            self.prof.events.append({"event": "journal_skip", "n": skipped})
+        return batch
+
+    def _replay_task(self, t: Task) -> bool:
+        """Mark ``t`` DONE (with its recorded result) if the journal says
+        it already finished; the single shared replay rule."""
+        if t.name not in self._replayed_done or t.state.terminal:
+            return False
+        t.state = TaskState.DONE
+        t.result = self._replayed_results.get(t.name, t.result)
+        return True
+
+    # ------------------------------------------------------------ drain
+    def drain(self) -> RuntimeProfile:
+        """Run until every submitted task is terminal (callbacks included:
+        work they inject is drained too).  Returns the session profile,
+        cumulative across drains."""
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        if self.rt.mode == "sim":
+            self._drain_sim()
+            self.prof.ttc = self.vnow
         else:
-            self._run_real(graph, prof)
-        prof.n_tasks = len(graph)
-        prof.n_failed = sum(1 for t in graph.tasks.values()
-                            if t.state == TaskState.FAILED)
-        return prof
+            self._drain_real()
+            self.prof.ttc = time.perf_counter() - self._t0
+        self.prof.n_tasks = len(self.graph)
+        self.prof.n_failed = sum(1 for t in self.graph.tasks.values()
+                                 if t.state == TaskState.FAILED)
+        self.prof.n_canceled = sum(1 for t in self.graph.tasks.values()
+                                   if t.state == TaskState.CANCELED)
+        return self.prof
+
+    # ------------------------------------------------------------ callbacks
+    def _queue_callback(self, t: Task):
+        if self.on_task_done is not None and t.speculative_of is None:
+            self._cbq.append(t)
+
+    def _flush_callbacks(self):
+        while self._cbq:
+            self.on_task_done(self._cbq.popleft(), self)
 
     # ------------------------------------------------------------ sim mode
-    def _run_sim(self, graph: TaskGraph, prof: RuntimeProfile):
-        vnow = 0.0
-        busy = 0
-        running: List = []            # heap of (v_finish, seq, task)
-        seq = 0
-        durations: Dict[str, List[float]] = {}
-        spec_launched: Dict[str, Task] = {}
+    def _overhead(self, fn):
+        t0 = time.perf_counter()
+        out = fn()
+        self.prof.t_rts_overhead += time.perf_counter() - t0
+        return out
 
-        def overhead(fn):
-            t0 = time.perf_counter()
-            out = fn()
-            prof.t_rts_overhead += time.perf_counter() - t0
-            return out
+    def _schedule_sim(self):
+        rt, graph = self.rt, self.graph
+        ready = sorted(graph.ready(), key=lambda t: t.tid)
+        for t in ready:
+            if rt.slots - self._busy < t.slots:
+                break
+            self._busy += t.slots
+            rt._acquire_slots(t)
+            t.attempts += 1
+            t.state = TaskState.RUNNING
+            t.t_scheduled = time.perf_counter()
+            t.v_started = self.vnow
+            rt.journal.record(t, "scheduled")
+            heapq.heappush(self._heap,
+                           (self.vnow + max(t.duration, 0.0), self._seq, t))
+            self._seq += 1
 
-        while not graph.done() or running:
-            if self.on_schedule is not None:
-                self.on_schedule(self, graph, vnow)
-            self._apply_resize()
+    def _finish_sim(self, t: Task):
+        rt, graph, prof = self.rt, self.graph, self.prof
+        t.state = TaskState.DONE
+        t.v_finished = self.vnow
+        t.t_finished = time.perf_counter()
+        prof.t_exec += t.duration
+        prof.slot_busy += t.duration * t.slots
+        self._durations.setdefault(t.stage, []).append(t.duration)
+        rt.journal.record(t, "finished")
+        if t.speculative_of:
+            # the duplicate won: complete the straggling original
+            # and kill it (freeing its slot now)
+            orig = graph.tasks.get(t.speculative_of)
+            if orig is not None and not orig.state.terminal:
+                orig.state = TaskState.DONE
+                orig.v_finished = self.vnow
+                orig.meta["slot_freed"] = True
+                self._busy -= orig.slots
+                rt._release_slots(orig)
+                rt.journal.record(orig, "finished", by="speculative")
+                self._queue_callback(orig)
+            self._spec_launched.pop(t.speculative_of, None)
+        else:
+            # original won: cancel its twin if any
+            twin = self._spec_launched.pop(t.name, None)
+            if twin is not None and not twin.state.terminal:
+                twin.state = TaskState.CANCELED
+            self._queue_callback(t)
 
-            def schedule():
-                nonlocal busy, seq
-                ready = sorted(graph.ready(), key=lambda t: t.tid)
-                for t in ready:
-                    if self.slots - busy < t.slots:
-                        break
-                    busy += t.slots
-                    self._acquire_slots(t)
-                    t.attempts += 1
-                    t.state = TaskState.RUNNING
-                    t.t_scheduled = time.perf_counter()
-                    t.v_started = vnow
-                    self.journal.record(t, "scheduled")
-                    heapq.heappush(running, (vnow + max(t.duration, 0.0),
-                                             seq, t))
-                    seq += 1
-            overhead(schedule)
+    def _drain_sim(self):
+        rt, graph, prof = self.rt, self.graph, self.prof
+        while True:
+            self._flush_callbacks()
+            if rt.on_schedule is not None:
+                rt.on_schedule(rt, graph, self.vnow)
+            rt._apply_resize()
+            self._overhead(self._schedule_sim)
 
-            if not running:
+            if not self._heap:
                 if graph.done():
                     break
-                # deadlock: unsatisfiable deps (failed upstream)
+                # nothing runnable: cancel only truly unsatisfiable tasks
+                # (failed/canceled upstream, or wider than the whole pilot)
+                # so a narrow task queued behind a too-wide one still runs
+                # on the next pass — same rule as real mode
+                canceled = False
                 for t in graph.tasks.values():
-                    if t.state == TaskState.NEW:
+                    if t.state == TaskState.NEW and (
+                            t.slots > rt.slots or any(
+                                graph.tasks[d].state.terminal
+                                and graph.tasks[d].state != TaskState.DONE
+                                for d in t.deps)):
                         t.state = TaskState.CANCELED
-                        self.journal.record(t, "canceled")
-                break
+                        rt.journal.record(t, "canceled")
+                        self._queue_callback(t)
+                        canceled = True
+                if not canceled:
+                    # termination guard (unreachable by construction: a
+                    # stuck NEW task always matches one rule above)
+                    for t in graph.tasks.values():
+                        if t.state == TaskState.NEW:
+                            t.state = TaskState.CANCELED
+                            rt.journal.record(t, "canceled")
+                            self._queue_callback(t)
+                self._flush_callbacks()
+                if graph.done():
+                    break
+                continue
 
-            vfin, _, t = heapq.heappop(running)
+            vfin, _, t = heapq.heappop(self._heap)
             if t.state.terminal:
                 # canceled twin / original superseded by its speculative
                 # duplicate: slot already freed at supersession; do NOT
                 # advance the clock to its stale finish time
                 if not t.meta.get("slot_freed"):
-                    busy -= t.slots
-                self._release_slots(t)
+                    self._busy -= t.slots
+                rt._release_slots(t)
                 continue
-            vnow = max(vnow, vfin)
-            busy -= t.slots
-            self._release_slots(t)
-
-            def finish():
-                nonlocal busy
-                t.state = TaskState.DONE
-                t.v_finished = vnow
-                t.t_finished = time.perf_counter()
-                prof.t_exec += t.duration
-                prof.slot_busy += t.duration * t.slots
-                durations.setdefault(t.stage, []).append(t.duration)
-                self.journal.record(t, "finished")
-                if t.speculative_of:
-                    # the duplicate won: complete the straggling original
-                    # and kill it (freeing its slot now)
-                    orig = graph.tasks.get(t.speculative_of)
-                    if orig is not None and not orig.state.terminal:
-                        orig.state = TaskState.DONE
-                        orig.v_finished = vnow
-                        orig.meta["slot_freed"] = True
-                        busy -= orig.slots
-                        self._release_slots(orig)
-                        self.journal.record(orig, "finished",
-                                            by="speculative")
-                    spec_launched.pop(t.speculative_of, None)
-                else:
-                    # original won: cancel its twin if any
-                    twin = spec_launched.pop(t.name, None)
-                    if twin is not None and not twin.state.terminal:
-                        twin.state = TaskState.CANCELED
-            overhead(finish)
+            self.vnow = max(self.vnow, vfin)
+            self._busy -= t.slots
+            rt._release_slots(t)
+            self._overhead(lambda: self._finish_sim(t))
 
             # straggler speculation: clone still-running outliers
-            if self.straggler_factor:
-                def spec():
-                    nonlocal busy
-                    busy = self._speculate_sim(
-                        graph, running, durations, spec_launched, vnow,
-                        prof, busy)
-                overhead(spec)
-        prof.ttc = vnow
+            if rt.straggler_factor:
+                self._overhead(self._speculate_sim)
 
-    def _speculate_sim(self, graph, running, durations, spec_launched,
-                       vnow, prof, busy):
-        for vfin, sq, t in list(running):
-            hist = durations.get(t.stage, [])
+    def _speculate_sim(self):
+        rt, prof = self.rt, self.prof
+        for vfin, sq, t in list(self._heap):
+            hist = self._durations.get(t.stage, [])
             if (t.idempotent and not t.state.terminal
                     and t.speculative_of is None
-                    and t.name not in spec_launched
-                    and self.slots - busy >= t.slots
-                    and len(hist) >= self.min_straggler_samples):
+                    and t.name not in self._spec_launched
+                    and rt.slots - self._busy >= t.slots
+                    and len(hist) >= rt.min_straggler_samples):
                 med = statistics.median(hist)
                 # the monitor fires when elapsed > factor * median; in DES
                 # that trigger time is known, so schedule the duplicate to
                 # start exactly then (if the original would still be running)
-                trigger = t.v_started + self.straggler_factor * med
+                trigger = t.v_started + rt.straggler_factor * med
                 if trigger < vfin:
                     dup = Task(name=t.name + f".spec{t.attempts}",
                                duration=med, slots=t.slots, stage=t.stage,
                                instance=t.instance, iteration=t.iteration,
                                speculative_of=t.name)
                     dup.state = TaskState.RUNNING
-                    dup.v_started = max(vnow, trigger)
+                    dup.v_started = max(self.vnow, trigger)
                     prof.n_speculative += 1
-                    busy += t.slots
-                    self._acquire_slots(dup)
+                    self._busy += t.slots
+                    rt._acquire_slots(dup)
                     heapq.heappush(
-                        running, (max(vnow, trigger) + med, id(dup), dup))
-                    spec_launched[t.name] = dup
-        return busy
+                        self._heap,
+                        (max(self.vnow, trigger) + med, id(dup), dup))
+                    self._spec_launched[t.name] = dup
 
     # ------------------------------------------------------------ real mode
-    def _run_real(self, graph: TaskGraph, prof: RuntimeProfile):
-        t_start = time.perf_counter()
-        lock = threading.Lock()
-        cv = threading.Condition(lock)
-        free = {"n": self.slots}
+    def _execute_real(self, t: Task):
+        rt, prof, cv = self.rt, self.prof, self._cv
+        t.t_started = time.perf_counter()
+        outcome = TaskState.DONE
+        try:
+            if t.run is not None:
+                t.result = t.run(t)
+            elif t.duration:
+                time.sleep(t.duration)
+        except Exception as e:  # noqa: BLE001 - task isolation boundary
+            t.error = f"{type(e).__name__}: {e}\n" \
+                      + traceback.format_exc()[-1500:]
+            outcome = (TaskState.NEW if t.attempts <= rt.max_retries
+                       else TaskState.FAILED)
+        t.t_finished = time.perf_counter()
+        with cv:
+            # the state transition happens INSIDE the lock: flipping a
+            # retry to NEW any earlier lets the drain thread reschedule it
+            # (and re-grant slot ids) before this attempt's bookkeeping
+            # releases the old ones
+            self._free["n"] += t.slots
+            rt._release_slots(t)
+            prof.t_exec += t.t_finished - t.t_started
+            prof.slot_busy += (t.t_finished - t.t_started) * t.slots
+            t.state = outcome
+            if outcome == TaskState.NEW:
+                prof.n_retries += 1
+            rt.journal.record(
+                t, "finished" if t.state == TaskState.DONE else "failed")
+            if t.state.terminal:
+                self._queue_callback(t)
+            self._inflight -= 1
+            cv.notify_all()
+
+    def _drain_real(self):
         # thread-per-task: slot gating already bounds concurrency, and a
         # fixed pool would cap an elastic grow mid-run
         workers: List[threading.Thread] = []
+        try:
+            self._drain_real_loop(workers)
+        finally:
+            # join even when a user on_done callback raised, so no worker
+            # is left mutating the profile/journal after drain() returns
+            for th in workers:
+                th.join()
 
-        def execute(t: Task):
-            t.t_started = time.perf_counter()
-            try:
-                if t.run is not None:
-                    t.result = t.run(t)
-                elif t.duration:
-                    time.sleep(t.duration)
-                t.state = TaskState.DONE
-            except Exception as e:  # noqa: BLE001 - task isolation boundary
-                t.error = f"{type(e).__name__}: {e}\n" \
-                          + traceback.format_exc()[-1500:]
-                if t.attempts <= self.max_retries:
-                    t.state = TaskState.NEW      # retry
-                    with lock:
-                        prof.n_retries += 1
-                else:
-                    t.state = TaskState.FAILED
-            t.t_finished = time.perf_counter()
-            with cv:
-                free["n"] += t.slots
-                self._release_slots(t)
-                prof.t_exec += t.t_finished - t.t_started
-                prof.slot_busy += (t.t_finished - t.t_started) * t.slots
-                self.journal.record(
-                    t, "finished" if t.state == TaskState.DONE else "failed")
-                cv.notify_all()
-
+    def _drain_real_loop(self, workers: List[threading.Thread]):
+        rt, graph, prof = self.rt, self.graph, self.prof
+        cv = self._cv
         with cv:
             while True:
-                if self.on_schedule is not None:
-                    self.on_schedule(self, graph, None)
-                free["n"] += self._apply_resize()   # elastic grow/shrink
+                self._flush_callbacks()
+                if rt.on_schedule is not None:
+                    rt.on_schedule(rt, graph, None)
+                self._free["n"] += rt._apply_resize()   # elastic grow/shrink
                 t0 = time.perf_counter()
                 # re-check capacity per task: a single pass may admit
                 # several tasks, each draining free["n"]
                 scheduled = []
                 for t in graph.ready():
-                    if t.slots > free["n"]:
+                    if t.slots > self._free["n"]:
                         continue
                     scheduled.append(t)
-                    free["n"] -= t.slots
-                    self._acquire_slots(t)
+                    self._free["n"] -= t.slots
+                    rt._acquire_slots(t)
                     t.meta["dep_results"] = {
                         d: graph.tasks[d].result for d in t.deps}
                     t.attempts += 1
                     t.state = TaskState.RUNNING
                     t.t_scheduled = time.perf_counter()
-                    self.journal.record(t, "scheduled")
-                    th = threading.Thread(target=execute, args=(t,),
-                                          daemon=True)
+                    rt.journal.record(t, "scheduled")
+                    self._inflight += 1
+                    th = threading.Thread(target=self._execute_real,
+                                          args=(t,), daemon=True)
                     workers.append(th)
                     th.start()
                 prof.t_rts_overhead += time.perf_counter() - t0
-                if graph.done():
+                quiescent = not self._inflight and not self._cbq
+                if graph.done() and quiescent:
                     break
-                in_flight = any(t.state == TaskState.RUNNING
-                                for t in graph.tasks.values())
-                if not scheduled and not in_flight:
-                    # nothing runnable: cancel unsatisfiable tasks
+                if not scheduled and quiescent:
+                    # nothing runnable: cancel unsatisfiable tasks — failed
+                    # upstream deps, or wider than the whole idle pilot
+                    # (nothing in flight, so free == capacity: such a task
+                    # can never start and would spin this loop forever)
                     for t in graph.tasks.values():
-                        if t.state == TaskState.NEW and any(
+                        if t.state != TaskState.NEW:
+                            continue
+                        if t.slots > self._free["n"] or any(
                                 graph.tasks[d].state.terminal
                                 and graph.tasks[d].state != TaskState.DONE
                                 for d in t.deps):
                             t.state = TaskState.CANCELED
-                            self.journal.record(t, "canceled")
-                    if graph.done():
+                            rt.journal.record(t, "canceled")
+                            self._queue_callback(t)
+                    if graph.done() and not self._cbq:
                         break
-                cv.wait(timeout=0.05)
-        for th in workers:
-            th.join()
-        prof.ttc = time.perf_counter() - t_start
+                    # retried tasks (back to NEW) reschedule next pass
+                if not self._cbq:
+                    cv.wait(timeout=0.05)

@@ -30,6 +30,12 @@ class Journal:
                "state": task.state.value, "attempts": task.attempts}
         if task.error:
             rec["error"] = task.error
+        if event == "finished" and task.result is not None:
+            try:                 # persist results a restart can replay —
+                json.dumps(task.result)   # callbacks (apply_exchange,
+                rec["result"] = task.result   # should_continue) need them
+            except (TypeError, ValueError):
+                pass             # non-JSON results replay as None
         rec.update(extra)
         self._fh.write(json.dumps(rec, default=str) + "\n")
 
@@ -39,12 +45,15 @@ class Journal:
             self._fh = None
 
     # -------------------------------------------------------------- replay
-    def replay(self, graph: TaskGraph) -> int:
-        """Mark tasks recorded DONE as done; returns #skipped."""
-        if not self.path or not os.path.exists(self.path):
-            return 0
-        done = set()
+    def load_done(self):
+        """Parse the journal once: (set of DONE task names, name->result).
+
+        Sessions load this at open and apply it per ``submit`` — dynamically
+        injected tasks replay the same way as prebuilt graphs."""
+        done: set = set()
         results: Dict[str, object] = {}
+        if not self.path or not os.path.exists(self.path):
+            return done, results
         with open(self.path) as f:
             for line in f:
                 try:
@@ -56,6 +65,11 @@ class Journal:
                     done.add(rec["task"])
                     if "result" in rec:
                         results[rec["task"]] = rec["result"]
+        return done, results
+
+    def replay(self, graph: TaskGraph) -> int:
+        """Mark tasks recorded DONE as done; returns #skipped."""
+        done, results = self.load_done()
         n = 0
         for name in done:
             t = graph.tasks.get(name)
