@@ -18,6 +18,13 @@ simulates.  ``on_done`` callbacks make workloads adaptive (append stages,
 extend loops, branch on results) — shapes the 2016 hook API could not
 express.
 
+Typed data-flow ports (``repro.core.flow``) couple pipelines into a
+DAG-of-ensembles: a stage declares ``outputs=[Channel("traj")]`` and a
+stage in ANOTHER pipeline consumes it via ``inputs={"traj": ch}`` (or
+pins one producer with ``inputs={"x": stage.future()}``); the consumer
+starts the moment its producer stage completes, while the producer
+pipeline keeps running.  Kernels see bound ports as ``ctx["inputs"]``.
+
 **Legacy hooks (still supported)** — the 2016 paper's subclass API
 (paper listings 1/4/5).  The patterns now *compile to PST* (see
 core/execution_plugin.py); behavior and profiles are unchanged.
@@ -46,6 +53,12 @@ from repro.core.ensemble import FusedEnsemble  # noqa: F401
 from repro.core.execution_plugin import (  # noqa: F401
     BaseExecutionPlugin,
     get_plugin,
+)
+from repro.core.flow import (  # noqa: F401
+    Channel,
+    Port,
+    StageFuture,
+    TypedPortError,
 )
 from repro.core.kernel_plugin import Kernel, kernel_names, register_kernel  # noqa: F401
 from repro.core.patterns import (  # noqa: F401

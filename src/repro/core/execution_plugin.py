@@ -4,10 +4,16 @@ pattern into PST pipelines (core/pst.py) and run them on an AppManager.
 One plugin per pattern.  The plugin is the ONLY component that sees both the
 pattern structure and the runtime — patterns stay execution-agnostic, the
 runtime stays pattern-agnostic.  Since the PST redesign the plugin no longer
-drives per-cycle TaskGraphs itself: it emits ``PipelineSpec`` objects whose
+drives per-cycle TaskGraphs itself: it emits *port-annotated* ``PipelineSpec``
+objects — consumer stages declare their producers as StageFuture inputs
+(core/flow.py), so the exchange/analysis kernels receive the member results
+as ``ctx["inputs"]`` and the dependency structure is explicit in the PST
+objects rather than implied by the per-pipeline barrier alone — whose
 ``on_done`` callbacks reproduce the pattern's control flow (apply_exchange,
 should_continue, ...) adaptively, and one long-lived runtime session
-executes everything.  The paper's TTC decomposition
+executes everything.  Profiles are pinned by tests: the port edges dedupe
+against the barrier deps, so task sets, dependencies and timings are
+unchanged.  The paper's TTC decomposition
 (TTC = T_EnMD(core+pattern+rts) + T_exec + T_data) is assembled by the
 AppManager; utilization is computed once over the whole run from
 accumulated busy slot-seconds (it used to be overwritten per cycle, so
@@ -59,12 +65,15 @@ class PipelineExecutionPlugin(BaseExecutionPlugin):
         # one PST pipeline per pipe instance: pipes advance independently
         # (a slow pipe never blocks another pipe's later stages)
         for p in range(pat.instances):
-            stages = [
-                Stage([TaskSpec(pat.stage_kernel(s, p),
-                                name=f"pipe{p:05d}.stage{s}",
-                                metadata={"instance": p})],
-                      name=f"stage{s}")
-                for s in range(1, pat.stages + 1)]
+            stages: List[Stage] = []
+            for s in range(1, pat.stages + 1):
+                stages.append(Stage(
+                    [TaskSpec(pat.stage_kernel(s, p),
+                              name=f"pipe{p:05d}.stage{s}",
+                              metadata={"instance": p})],
+                    name=f"stage{s}",
+                    inputs=({"prev": stages[-1].future()} if stages
+                            else None)))
             pipes.append(PipelineSpec(stages, name=f"pipe{p:05d}"))
         return pipes
 
@@ -98,10 +107,13 @@ class REExecutionPlugin(BaseExecutionPlugin):
                     # exchange was applied — the PST adaptivity hook
                     pipe.extend(cycle_stages(c + 1))
 
+            # the exchange consumes the simulation stage through a typed
+            # port: the kernel sees member results as ctx["inputs"]["members"]
             exchange = Stage(
                 [TaskSpec(pat.prepare_exchange(pat.replicas), name=xname,
                           metadata={"iteration": c})],
-                name="exchange", on_done=on_exchange)
+                name="exchange", inputs={"members": sims.future()},
+                on_done=on_exchange)
             return [sims, exchange]
 
         if pat.cycles <= 0:
@@ -151,7 +163,8 @@ class SALExecutionPlugin(BaseExecutionPlugin):
                 [TaskSpec(pat.analysis_stage(it, j), name=n,
                           metadata={"instance": j, "iteration": it})
                  for j, n in enumerate(ana_names)],
-                name="analysis", on_done=on_analysis)
+                name="analysis", inputs={"sims": sims.future()},
+                on_done=on_analysis)
             return [sims, analysis]
 
         stages: List[Stage] = []

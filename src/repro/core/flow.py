@@ -1,0 +1,238 @@
+"""Typed data-flow ports: cross-pipeline coupling for PST workflows.
+
+The PST API (core/pst.py) runs many pipelines over one pilot session, but
+until this module a stage could only consume results from *its own*
+pipeline's previous stage.  Ports turn that shared-session concurrency into
+a true DAG-of-ensembles: a ``Stage`` (or ``TaskSpec``) declares ``inputs``
+and ``outputs``, and the ``AppManager`` resolves every cross-pipeline edge
+into task dependencies on the shared ``RuntimeSession`` — a consumer stage
+in pipeline B starts the moment the producing stage in pipeline A is done,
+while A's later stages are still running.
+
+Two edge primitives:
+
+  StageFuture   a handle to ONE specific stage's eventual results
+                (``stage.future()``).  The consumer's tasks gain direct
+                dependencies on the producer's tasks, so the consumer is
+                submitted as soon as the producer stage is, and starts the
+                instant the producer's last task finishes.
+  Channel       a named, ordered stream decoupling producers from
+                consumers.  Every completion of a producing stage ``put``s
+                its results; each consumer binding ``take``s the oldest
+                untaken put (FIFO work-queue).  Repeating producers (one
+                put per cycle) feed repeating consumers without either side
+                naming the other's stages.
+
+Producer ensemble -> shared analysis ensemble -> feedback stage::
+
+    from repro.core import AppManager, PipelineSpec, Stage, TaskSpec
+    from repro.core.flow import Channel
+
+    traj = Channel("trajectories", dtype=dict)   # typed: puts are checked
+    weights = Channel("weights")
+
+    # ensemble of simulators: each cycle's stage streams into `traj`
+    prod = PipelineSpec(
+        [Stage([TaskSpec(md_kernel(m)) for m in range(members)],
+               name=f"cycle{c}", outputs=[traj])
+         for c in range(cycles)], name="producer")
+
+    # shared analysis ensemble: each round consumes ONE trajectory put —
+    # round 0 starts while the producer is still on cycle 1
+    ana = PipelineSpec(
+        [Stage([TaskSpec(ana_kernel())], name=f"round{c}",
+               inputs={"traj": traj}, outputs=[weights])
+         for c in range(cycles)], name="analysis")
+
+    # feedback: re-weights sampling from the analysis stream
+    fb = PipelineSpec(
+        [Stage([TaskSpec(fb_kernel())], name=f"fb{c}",
+               inputs={"weights": weights}) for c in range(cycles)],
+        name="feedback")
+
+    AppManager(pilot).run([prod, ana, fb])
+
+A consumer kernel receives its bound ports as ``ctx["inputs"]`` — for the
+analysis kernel above, ``ctx["inputs"]["traj"]`` is the producing stage's
+``{task_name: result}`` dict.  A pipeline whose next stage's inputs are not
+yet satisfiable parks ("waiting") and is woken when the producer stage is
+submitted (futures) or a put arrives (channels); pipelines still parked
+when the session drains are reported ``blocked``.
+
+Restart determinism: the journal records every ``channel_put`` (value) and
+``channel_take`` (consumer -> producer binding).  On replay, puts reuse the
+journaled value and takes re-bind to the journaled producer — consumer
+stages see byte-identical inputs and no completed task re-executes (see
+runtime/journal.py ``load_flow``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class Port:
+    """A named, optionally typed attachment point for data flow."""
+    name: str
+    dtype: Optional[type] = None
+
+
+class TypedPortError(TypeError):
+    """A put violated the channel's declared payload type."""
+
+
+class Channel:
+    """Named, ordered stream of stage/task outputs shared across pipelines.
+
+    Producers are stages (put value = the stage's ``{task: result}`` dict)
+    or single tasks (put value = the task's result).  ``dtype``, when set,
+    is enforced per task result at put time.  Consumption is a FIFO
+    work-queue: each consumer binding takes the oldest untaken put exactly
+    once.  A Channel belongs to one AppManager run topology; names must be
+    unique within it.
+    """
+
+    def __init__(self, name: str, dtype: Optional[type] = None):
+        if not name:
+            raise ValueError("channel needs a non-empty name")
+        self.name = name
+        self.dtype = dtype
+        self.puts: List[Tuple[str, Any]] = []   # (producer_key, value)
+        self._index: Dict[str, int] = {}        # producer_key -> put index
+        self._taken: set = set()                # consumed put indices
+        self._scan_from = 0                     # first possibly-untaken idx
+        # puts pre-bound to a consumer by journal replay (producer_key ->
+        # consumer_key): invisible to fresh FIFO takes
+        self._reserved: Dict[str, str] = {}
+
+    @property
+    def port(self) -> Port:
+        return Port(self.name, self.dtype)
+
+    def check(self, value: Any, *, task_level: bool = False):
+        """Type-check a put payload.  Stage-level puts are ``{task:
+        result}`` dicts (each result checked); task-level puts are one bare
+        result (checked as-is — it may itself be a dict)."""
+        if self.dtype is None:
+            return
+        if not task_level and not isinstance(value, dict):
+            raise TypedPortError(
+                f"channel {self.name!r}: stage-level puts must be "
+                f"{{task: result}} dicts, got {type(value).__name__}")
+        results = [value] if task_level else value.values()
+        for r in results:
+            if not isinstance(r, self.dtype):
+                raise TypedPortError(
+                    f"channel {self.name!r} expects {self.dtype.__name__} "
+                    f"results, got {type(r).__name__}")
+
+    def put(self, producer_key: str, value: Any, *,
+            task_level: bool = False, check: bool = True) -> int:
+        """``check=False`` skips the dtype check — the AppManager passes it
+        in DES (sim) mode, where tasks run nothing and every result is
+        None, so a typed channel would reject the placeholder payloads."""
+        if producer_key in self._index:
+            raise ValueError(f"channel {self.name!r}: duplicate put from "
+                             f"{producer_key!r}")
+        if check:
+            self.check(value, task_level=task_level)
+        self._index[producer_key] = len(self.puts)
+        self.puts.append((producer_key, value))
+        return self._index[producer_key]
+
+    def has_put(self, producer_key: str) -> bool:
+        return producer_key in self._index
+
+    def _fifo_candidates(self, consumer_key: str):
+        # amortized O(new puts): the cursor skips the fully-consumed prefix
+        # (reserved-but-untaken replay puts can pin it, bounded by replay)
+        while self._scan_from < len(self.puts) \
+                and self._scan_from in self._taken:
+            self._scan_from += 1
+        for i in range(self._scan_from, len(self.puts)):
+            if i in self._taken:
+                continue
+            if self._reserved.get(self.puts[i][0],
+                                  consumer_key) != consumer_key:
+                continue                        # held for a replayed taker
+            yield i
+
+    def n_available(self, consumer_key: str) -> int:
+        """Puts a fresh (non-replayed) take by ``consumer_key`` could bind."""
+        return sum(1 for _ in self._fifo_candidates(consumer_key))
+
+    def take(self, consumer_key: str,
+             producer_key: Optional[str] = None) -> Tuple[str, Any]:
+        """Consume one put: the journaled producer when replaying, else the
+        oldest untaken put.  Returns ``(producer_key, value)``."""
+        if producer_key is not None:
+            idx = self._index.get(producer_key)
+            if idx is None or idx in self._taken:
+                raise LookupError(
+                    f"channel {self.name!r}: put from {producer_key!r} "
+                    "not available for replayed take")
+        else:
+            idx = next(self._fifo_candidates(consumer_key), None)
+            if idx is None:
+                raise LookupError(f"channel {self.name!r}: no put available")
+        self._taken.add(idx)
+        return self.puts[idx]
+
+    def __repr__(self):
+        return (f"Channel({self.name!r}, {len(self.puts)} puts, "
+                f"{len(self._taken)} taken)")
+
+
+class StageFuture:
+    """Handle to one Stage's eventual results — a cross-pipeline edge.
+
+    Created via ``Stage.future()``.  The consuming stage's tasks depend
+    directly on the producer stage's tasks; at execution time the bound
+    port resolves to the producer's ``{task: result}`` dict.
+    """
+
+    def __init__(self, stage, port: str = ""):
+        self.stage = stage
+        self.port = port or (getattr(stage, "name", "") or "stage")
+
+    @property
+    def submitted(self) -> bool:
+        return getattr(self.stage, "task_names", None) is not None
+
+    def __repr__(self):
+        return f"StageFuture({self.stage!r})"
+
+
+def normalize_sources(sources) -> Dict[str, Any]:
+    """Normalize an ``inputs`` declaration to ``{port_name: source}``.
+
+    Accepts None, a single Channel/StageFuture, an iterable of them (port
+    name defaults to the channel name / producer stage name), or a dict.
+    """
+    if sources is None:
+        return {}
+    if isinstance(sources, dict):
+        return dict(sources)
+    if isinstance(sources, (Channel, StageFuture)):
+        sources = [sources]
+    out: Dict[str, Any] = {}
+    for src in sources:
+        port = src.name if isinstance(src, Channel) else src.port
+        if port in out:
+            raise ValueError(f"duplicate input port {port!r}")
+        out[port] = src
+    return out
+
+
+def normalize_outputs(outputs) -> List[Channel]:
+    """Normalize an ``outputs`` declaration to a list of Channels."""
+    if outputs is None:
+        return []
+    if isinstance(outputs, Channel):
+        return [outputs]
+    chans = list(outputs)
+    for ch in chans:
+        if not isinstance(ch, Channel):
+            raise TypeError(f"outputs must be Channels, got {type(ch)}")
+    return chans

@@ -1,4 +1,4 @@
-"""Composable Pipeline-Stage-Task (PST) workflow API.
+"""Composable Pipeline-Stage-Task (PST) workflow API with data-flow ports.
 
 The seed mirrored the 2016 toolkit's subclass-hook pattern API
 (``stage_1..stage_M`` via getattr, ``prepare_*`` overrides).  The second
@@ -7,17 +7,19 @@ replaced those hardcoded patterns with composable *data objects* because the
 hook API structurally cannot express adaptive or coupled ensembles.  This
 module is that redesign:
 
-  TaskSpec      one executable unit: a bound Kernel + placement metadata.
+  TaskSpec      one executable unit: a bound Kernel + placement metadata
+                (+ optional per-task data-flow ports).
   Stage         a set of concurrent TaskSpecs + an ``on_done`` adaptivity
                 callback that may append stages or mutate the downstream
-                pipeline when the stage completes.
+                pipeline when the stage completes, + declared ``inputs`` /
+                ``outputs`` ports (core/flow.py) for cross-pipeline edges.
   PipelineSpec  an ordered list of Stages; stage k+1 starts when stage k
                 finishes (a per-pipeline barrier — never a global one).
   AppManager    executes many pipelines concurrently over ONE long-lived
                 PilotRuntime session (runtime/executor.RuntimeSession) with
-                dynamic task injection: when a stage of pipeline A
-                completes, A's next stage is submitted immediately, while
-                pipeline B's tasks are still running.
+                dynamic task injection, resolving every cross-pipeline port
+                edge into task dependencies on the shared session — a true
+                DAG-of-ensembles, not just shared-session concurrency.
 
 Quickstart::
 
@@ -29,9 +31,19 @@ Quickstart::
     profile = AppManager(pilot).run([PipelineSpec([sim, ana], name="e0"),
                                      PipelineSpec([...], name="e1")])
 
+Coupling (see core/flow.py for the full producer -> analysis -> feedback
+example): a Stage in pipeline B consumes a Stage in pipeline A either via a
+``Channel`` (``outputs=[ch]`` / ``inputs={"traj": ch}``: FIFO stream, one
+put per producing stage completion) or a ``StageFuture``
+(``inputs={"traj": stage_a.future()}``: direct task dependencies).  The
+consumer starts the moment its producer stage is done — while pipeline A's
+later stages are still running.  A pipeline whose next stage's inputs are
+not yet satisfiable parks and is woken by the producing event; pipelines
+still parked when the session drains are reported ``blocked``.
+
 The legacy patterns (Pipeline, BagOfTasks, ReplicaExchange,
 SimulationAnalysisLoop) still work: their execution plugins are now thin
-compilers from the hook API to PST (see core/execution_plugin.py).
+compilers from the hook API to port-annotated PST (core/execution_plugin.py).
 
 Placement: tasks land on mesh slots via ``PilotRuntime.submesh_for`` — in
 real mode a kernel's ``ctx["submesh"]`` is the jax Mesh over the devices of
@@ -44,8 +56,12 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional, Union
 
+from repro.core import flow
+from repro.core.flow import Channel, StageFuture
 from repro.core.kernel_plugin import Kernel
 from repro.runtime.states import Task, TaskState
+
+_MISSING = object()
 
 
 @dataclass
@@ -89,7 +105,7 @@ class ExecutionProfile:
 
 @dataclass
 class TaskSpec:
-    """Kernel + slots + metadata: what to run, how wide, and labels.
+    """Kernel + slots + metadata (+ ports): what to run, how wide, labels.
 
     ``name`` (optional) becomes the runtime task name verbatim — callers
     providing names are responsible for global uniqueness; unnamed specs get
@@ -97,10 +113,17 @@ class TaskSpec:
     extension reuses a stage name).  Slot width comes from ``kernel.cores``.
     ``metadata`` keys ``instance`` and ``iteration`` land on the Task record
     (profiling labels); everything else rides along in ``task.meta``.
+
+    ``inputs``/``outputs`` are per-TASK ports: an input Channel takes one
+    put for this task alone; an output Channel receives this task's bare
+    result the moment the task finishes (finer-grained streaming than the
+    stage-level ports, which move ``{task: result}`` dicts per stage).
     """
     kernel: Kernel
     name: str = ""
     metadata: Dict[str, Any] = field(default_factory=dict)
+    inputs: Any = None
+    outputs: Any = None
 
 
 class Stage:
@@ -110,23 +133,42 @@ class Stage:
     failed) and may mutate the downstream graph: append stages via
     ``pipeline.add_stage`` / ``pipeline.extend`` or return an iterable of
     new stages.  ``stage.results`` maps task name -> result.
+
+    ``inputs`` declares data-flow sources (``{port: Channel|StageFuture}``,
+    or a list — see core/flow.py); kernels receive the bound values as
+    ``ctx["inputs"][port]``.  ``outputs`` lists Channels that receive this
+    stage's ``{task: result}`` dict when the stage completes.  A Stage is
+    executed at most once by one AppManager (adaptive loops build a fresh
+    Stage per cycle).
     """
 
     def __init__(self, tasks: Iterable[Union[TaskSpec, Kernel]] = (), *,
                  name: str = "",
+                 inputs: Any = None, outputs: Any = None,
                  on_done: Optional[Callable[["Stage", "PipelineSpec"],
                                             Any]] = None):
         self.name = name
         self.tasks: List[TaskSpec] = [
             t if isinstance(t, TaskSpec) else TaskSpec(t) for t in tasks]
+        self.inputs = inputs
+        self.outputs = outputs
         self.on_done = on_done
         self.results: Dict[str, Any] = {}
         self.n_failed = 0
+        # set by the AppManager when the stage is submitted
+        self.task_names: Optional[List[str]] = None
+        self.bound_inputs: Dict[str, Any] = {}   # channel ports, concrete
+        self._future_ports: List = []            # (port, StageFuture), lazy
+        self._port_deps: List[str] = []          # producer task names
 
     def add(self, task: Union[TaskSpec, Kernel]) -> TaskSpec:
         spec = task if isinstance(task, TaskSpec) else TaskSpec(task)
         self.tasks.append(spec)
         return spec
+
+    def future(self, port: str = "") -> StageFuture:
+        """Cross-pipeline handle to this stage's eventual results."""
+        return StageFuture(self, port)
 
     def __repr__(self):
         return f"Stage({self.name!r}, {len(self.tasks)} tasks)"
@@ -164,7 +206,9 @@ class _PipelineRun:
         self.spec = spec
         self.name = name
         self.idx = -1                 # index of the currently running stage
-        self.state = "pending"        # pending | running | done | failed
+        # pending | running | waiting | done | failed | blocked
+        self.state = "pending"
+        self.waiting_on: Optional[str] = None
         self.pending: set = set()     # outstanding task names, current stage
         self.stage_task_names: List[List[str]] = []
 
@@ -176,10 +220,17 @@ class AppManager:
     All pipelines share the runtime's slots; each advances independently —
     stage k+1 of pipeline A is injected into the live session the moment
     stage k completes, regardless of what B is doing (no global barrier, no
-    per-cycle graph teardown).
+    per-cycle graph teardown).  Port declarations (core/flow.py) couple
+    pipelines into a DAG-of-ensembles resolved on the same session.
+
+    ``strategy`` (runtime/strategy.AdaptiveSlotStrategy) is applied at every
+    stage completion with the LIVE per-pipeline queue depths, so the pilot
+    elastically grows into a backlog and shrinks when pipelines idle —
+    within one session, not just between runs.
     """
 
-    def __init__(self, pilot, *, profile: Optional[ExecutionProfile] = None):
+    def __init__(self, pilot, *, profile: Optional[ExecutionProfile] = None,
+                 strategy=None):
         if hasattr(pilot, "runtime"):
             self.pilot = pilot
             self.runtime = pilot.runtime
@@ -187,27 +238,52 @@ class AppManager:
             self.pilot = None
             self.runtime = pilot
         self.profile = profile if profile is not None else ExecutionProfile()
+        self.strategy = strategy
         self._kernels: Dict[str, Kernel] = {}
         self._task_index: Dict[str, _PipelineRun] = {}
         self._stage_of: Dict[str, Stage] = {}
+        self._spec_of: Dict[str, TaskSpec] = {}
+        self._task_bound: Dict[str, Dict[str, Any]] = {}
+        self._task_futures: Dict[str, List] = {}
         self.session = None            # live RuntimeSession while running
         self.pipeline_runs: Dict[str, _PipelineRun] = {}
+        # data-flow state: registered channels, parked pipelines, and the
+        # journal's replayed puts/takes (restart determinism; loaded
+        # lazily on first port use so port-free workloads never pay a
+        # second journal parse on top of the session's load_done)
+        self.channels: Dict[str, Channel] = {}
+        self._parked: Dict[Any, List[_PipelineRun]] = {}
+        self._replayed_puts: Optional[Dict] = None
+        self._replayed_takes: Optional[Dict] = None
 
     # ------------------------------------------------------------ build
-    def _make_run(self, kernel: Kernel):
+    def _make_run(self, kernel: Kernel, stage: Stage):
         if self.runtime.mode != "real":
             return None
 
-        def run(task: Task, _k=kernel):
+        def run(task: Task, _k=kernel, _stage=stage):
             ctx = {"pilot": self.pilot, "runtime": self.runtime,
                    "task": task,
-                   "dep_results": task.meta.get("dep_results", {})}
+                   "dep_results": task.meta.get("dep_results", {}),
+                   "inputs": self._bound_inputs_for(task, _stage)}
             if self.runtime.topology is not None \
                     and task.meta.get("slot_ids"):
                 ctx["submesh"] = self.runtime.submesh_for(task)
             return _k.execute(ctx)
 
         return run
+
+    def _bound_inputs_for(self, task: Task, stage: Stage) -> Dict[str, Any]:
+        """Concrete port values for one task: channel takes were bound at
+        submission; StageFuture ports resolve now (their producer tasks are
+        dependencies, so the results are complete by execution time)."""
+        inputs = dict(stage.bound_inputs)
+        for port, fut in stage._future_ports:
+            inputs[port] = dict(fut.stage.results)
+        inputs.update(self._task_bound.get(task.name, {}))
+        for port, fut in self._task_futures.get(task.name, ()):
+            inputs[port] = dict(fut.stage.results)
+        return inputs
 
     def _build_task(self, spec: TaskSpec, pr: _PipelineRun, stage: Stage,
                     stage_idx: int, j: int, deps: List[str]) -> Task:
@@ -216,9 +292,12 @@ class AppManager:
         # stage_idx keeps auto-names unique when a stage NAME repeats
         # across appended cycles (the adaptive extension pattern)
         name = spec.name or f"{pr.name}.{stage_idx:04d}.{stage_label}.{j:05d}"
-        t = Task(name=name, run=self._make_run(k),
+        port_deps = self._bind_task_ports(spec, pr, name, stage_idx, j)
+        all_deps = list(dict.fromkeys(
+            [*deps, *stage._port_deps, *port_deps]))
+        t = Task(name=name, run=self._make_run(k, stage),
                  duration=(k.sim_duration or 0.0), slots=k.cores,
-                 deps=list(deps), stage=stage_label,
+                 deps=all_deps, stage=stage_label,
                  instance=int(spec.metadata.get("instance", j)),
                  iteration=int(spec.metadata.get("iteration", 0)),
                  idempotent=k.idempotent)
@@ -230,28 +309,172 @@ class AppManager:
         self._kernels[name] = k
         self._task_index[name] = pr
         self._stage_of[name] = stage
+        self._spec_of[name] = spec
         return t
+
+    # ------------------------------------------------------------ ports
+    def _ensure_flow_loaded(self):
+        if self._replayed_puts is None:
+            self._replayed_puts, self._replayed_takes = \
+                self.runtime.journal.load_flow()
+
+    def _register_channel(self, ch: Channel):
+        self._ensure_flow_loaded()
+        cur = self.channels.get(ch.name)
+        if cur is None:
+            self.channels[ch.name] = ch
+            # reserve journaled put->consumer bindings so a replayed take
+            # always re-binds to ITS producer, never a FIFO steal
+            for (cname, ck), pk in self._replayed_takes.items():
+                if cname == ch.name:
+                    ch._reserved[pk] = ck
+        elif cur is not ch:
+            raise ValueError(
+                f"two different Channel objects named {ch.name!r} on one "
+                "AppManager")
+
+    def _iter_bindings(self, stage: Stage, pr: _PipelineRun, idx: int):
+        """Yield (consumer_key, port, source, task_j) for every declared
+        input of the stage and its task specs."""
+        for port, src in flow.normalize_sources(stage.inputs).items():
+            yield f"{pr.name}:{idx:04d}:{port}", port, src, None
+        for j, spec in enumerate(stage.tasks):
+            for port, src in flow.normalize_sources(spec.inputs).items():
+                yield f"{pr.name}:{idx:04d}:{j:05d}:{port}", port, src, j
+
+    def _input_blocker(self, stage: Stage, pr: _PipelineRun, idx: int):
+        """First unsatisfiable input, as ``(parking_key, description)``;
+        None when every port can bind right now."""
+        fresh: Dict[str, int] = {}
+        for ck, port, src, _j in self._iter_bindings(stage, pr, idx):
+            if isinstance(src, Channel):
+                self._register_channel(src)
+                pk = self._replayed_takes.get((src.name, ck))
+                if pk is not None:
+                    i = src._index.get(pk)
+                    if i is None or i in src._taken:
+                        return (("channel", src.name),
+                                f"channel:{src.name}")
+                else:
+                    fresh[src.name] = fresh.get(src.name, 0) + 1
+            elif isinstance(src, StageFuture):
+                if not src.submitted:
+                    return (("future", id(src.stage)),
+                            f"stage:{getattr(src.stage, 'name', '?')}")
+            else:
+                raise TypeError(f"input port {port!r}: expected Channel or "
+                                f"StageFuture, got {type(src).__name__}")
+        for cname, n in fresh.items():
+            if self.channels[cname].n_available("") < n:
+                return (("channel", cname), f"channel:{cname}")
+        for ch in flow.normalize_outputs(stage.outputs):
+            self._register_channel(ch)
+        return None
+
+    def _take(self, ch: Channel, ck: str) -> Any:
+        pk = self._replayed_takes.get((ch.name, ck))
+        producer, value = ch.take(ck, pk)
+        self.runtime.journal.record_flow("channel_take", ch.name, producer,
+                                         consumer=ck)
+        return value
+
+    def _bind_stage_inputs(self, stage: Stage, pr: _PipelineRun, idx: int):
+        stage.bound_inputs = {}
+        stage._future_ports = []
+        stage._port_deps = []
+        for port, src in flow.normalize_sources(stage.inputs).items():
+            if isinstance(src, Channel):
+                ck = f"{pr.name}:{idx:04d}:{port}"
+                stage.bound_inputs[port] = self._take(src, ck)
+            else:
+                stage._future_ports.append((port, src))
+                stage._port_deps.extend(src.stage.task_names)
+
+    def _bind_task_ports(self, spec: TaskSpec, pr: _PipelineRun, name: str,
+                         idx: int, j: int) -> List[str]:
+        port_deps: List[str] = []
+        for port, src in flow.normalize_sources(spec.inputs).items():
+            if isinstance(src, Channel):
+                ck = f"{pr.name}:{idx:04d}:{j:05d}:{port}"
+                self._task_bound.setdefault(name, {})[port] = \
+                    self._take(src, ck)
+            else:
+                self._task_futures.setdefault(name, []).append((port, src))
+                port_deps.extend(src.stage.task_names)
+        return port_deps
+
+    def _put(self, ch: Channel, pk: str, fresh_value, *,
+             task_level: bool = False):
+        """The one put-with-replay protocol: journaled values override the
+        freshly computed one, the put is recorded, waiters wake."""
+        self._register_channel(ch)
+        if ch.has_put(pk):
+            return
+        value = self._replayed_puts.get((ch.name, pk), _MISSING)
+        if value is _MISSING:
+            value = fresh_value
+        ch.put(pk, value, task_level=task_level,
+               check=self.runtime.mode == "real")
+        self.runtime.journal.record_flow("channel_put", ch.name, pk,
+                                         value=value)
+        self._wake(("channel", ch.name))
+
+    def _emit_outputs(self, stage: Stage, pr: _PipelineRun, idx: int):
+        """Stage completed: put its {task: result} dict on every declared
+        output channel."""
+        for ch in flow.normalize_outputs(stage.outputs):
+            self._put(ch, f"{pr.name}:{idx:04d}", dict(stage.results))
+
+    def _emit_task_outputs(self, task: Task, spec: TaskSpec):
+        for ch in flow.normalize_outputs(spec.outputs):
+            self._put(ch, task.name, task.result, task_level=True)
+
+    def _wake(self, key):
+        """Re-attempt submission of pipelines parked on ``key`` (they
+        re-park on their next unsatisfied input, if any).  Only "waiting"
+        pipelines wake: a pipeline marked "blocked" belongs to a drained
+        session whose task graph is gone — resubmitting its stages into a
+        later run's fresh session would reference dead dependency names."""
+        for pr in self._parked.pop(key, []):
+            if pr.state == "waiting":
+                self._submit_next_stage(pr, dynamic=True)
 
     # ------------------------------------------------------------ advance
     def _submit_next_stage(self, pr: _PipelineRun, *, dynamic: bool):
-        """Submit pr's next stage; skips through empty (control-only)
-        stages, firing their on_done inline."""
+        """Submit pr's next stage; parks the pipeline when its inputs are
+        not yet satisfiable; skips through empty (control-only) stages,
+        firing their on_done inline."""
         while True:
-            pr.idx += 1
-            if pr.idx >= len(pr.spec.stages):
+            nxt = pr.idx + 1
+            if nxt >= len(pr.spec.stages):
                 pr.state = "done"
                 return
-            pr.state = "running"
-            stage = pr.spec.stages[pr.idx]
-            deps = pr.stage_task_names[-1] if pr.stage_task_names else []
-            tasks = [self._build_task(spec, pr, stage, pr.idx, j, deps)
-                     for j, spec in enumerate(stage.tasks)]
-            if tasks:
-                pr.pending = {t.name for t in tasks}
-                pr.stage_task_names.append([t.name for t in tasks])
-                self.session.submit(tasks, dynamic=dynamic)
+            stage = pr.spec.stages[nxt]
+            blocker = self._input_blocker(stage, pr, nxt)
+            if blocker is not None:
+                key, desc = blocker
+                pr.state = "waiting"
+                pr.waiting_on = desc
+                self._parked.setdefault(key, []).append(pr)
                 return
-            # empty stage: pure control point — fire on_done and continue
+            pr.idx = nxt
+            pr.state = "running"
+            pr.waiting_on = None
+            self._bind_stage_inputs(stage, pr, nxt)
+            deps = pr.stage_task_names[-1] if pr.stage_task_names else []
+            tasks = [self._build_task(spec, pr, stage, nxt, j, deps)
+                     for j, spec in enumerate(stage.tasks)]
+            stage.task_names = [t.name for t in tasks]
+            if tasks:
+                pr.pending = set(stage.task_names)
+                pr.stage_task_names.append(list(stage.task_names))
+                self.session.submit(tasks, dynamic=dynamic)
+                # consumers waiting on this stage's submission (futures)
+                self._wake(("future", id(stage)))
+                return
+            # empty stage: pure control point — emit, fire on_done, continue
+            self._wake(("future", id(stage)))
+            self._emit_outputs(stage, pr, nxt)
             self._fire_on_done(stage, pr)
 
     def _fire_on_done(self, stage: Stage, pr: _PipelineRun):
@@ -279,6 +502,7 @@ class AppManager:
         if task.state == TaskState.DONE:
             stage.results[task.name] = task.result
             prof.results.setdefault("tasks", {})[task.name] = task.result
+            self._emit_task_outputs(task, self._spec_of[task.name])
         else:
             stage.n_failed += 1
         pr.pending.discard(task.name)
@@ -288,8 +512,31 @@ class AppManager:
         if stage.n_failed:
             pr.state = "failed"
             return
+        self._emit_outputs(stage, pr, pr.idx)    # puts before adaptivity
         self._fire_on_done(stage, pr)
         self._submit_next_stage(pr, dynamic=True)
+        if self.strategy is not None:
+            self._apply_strategy()
+
+    # ------------------------------------------------------------ adaptive
+    def _apply_strategy(self):
+        """Feed the adaptive strategy from LIVE per-pipeline queue depth
+        (submitted-but-not-started tasks), within the running session."""
+        graph = self.session.graph
+        backlogs = {
+            p.name: sum(1 for nm in p.pending
+                        if graph.tasks[nm].state == TaskState.NEW)
+            for p in self.pipeline_runs.values()
+            if p.state in ("running", "waiting")}
+        backlog = sum(backlogs.values())
+        slots = max(self.runtime.slots, 1)
+        # demand-aware utilization: busy slots plus the queued work that
+        # could fill them now (instantaneous busy alone reads 0 at a stage
+        # boundary and would always vote shrink)
+        utilization = min(1.0, (self.session.busy_slots + backlog) / slots)
+        self.strategy.apply(self.pilot or self.runtime,
+                            utilization=utilization, backlog=backlog,
+                            per_pipeline=backlogs)
 
     # ------------------------------------------------------------ run
     def run(self, pipelines: Union[PipelineSpec, Iterable[PipelineSpec]]
@@ -315,6 +562,11 @@ class AppManager:
             self._submit_next_stage(pr, dynamic=False)
         rp = self.session.drain()
 
+        # pipelines still parked when the session drained can never wake
+        for pr in self.pipeline_runs.values():
+            if pr.state == "waiting":
+                pr.state = "blocked"
+
         prof.ttc += rp.ttc
         prof.t_exec += rp.t_exec
         prof.t_rts_overhead += rp.t_rts_overhead
@@ -331,6 +583,8 @@ class AppManager:
         prof.results["pipelines"] = {
             pr.name: {"state": pr.state,
                       "n_stages": len(pr.spec.stages),
-                      "n_tasks": sum(len(ns) for ns in pr.stage_task_names)}
+                      "n_tasks": sum(len(ns) for ns in pr.stage_task_names),
+                      **({"waiting_on": pr.waiting_on}
+                         if pr.state == "blocked" else {})}
             for pr in self.pipeline_runs.values()}
         return prof

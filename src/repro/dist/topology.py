@@ -58,6 +58,28 @@ class SlotTopology:
         return cls(devices=arr.reshape(n_slots, arr.size // n_slots),
                    axis_names=axis_names)
 
+    def recarve(self, n_slots: int) -> "SlotTopology":
+        """Re-carve into ``n_slots`` finer slots by splitting the leading
+        slot axis (e.g. 2 pods of ("data", "model") 16x16 -> 4 half-pods of
+        8x16).  Grow-only: ``n_slots`` must be a multiple of the current
+        slot count and the split must divide the first slot axis evenly.
+        """
+        cur = self.n_slots
+        if n_slots == cur:
+            return self
+        if n_slots < cur or n_slots % cur:
+            raise ValueError(f"cannot re-carve {cur} slots into {n_slots}: "
+                             "grow-only, must be an integer multiple")
+        factor = n_slots // cur
+        if self.devices.ndim < 2 or self.devices.shape[1] % factor:
+            raise ValueError(
+                f"cannot split slot axis {self.axis_names[:1]} of shape "
+                f"{self.devices.shape[1:]} into {factor} parts")
+        shape = self.devices.shape
+        dev = self.devices.reshape(cur * factor, shape[1] // factor,
+                                   *shape[2:])
+        return SlotTopology(devices=dev, axis_names=self.axis_names)
+
     # ------------------------------------------------------------ queries
     @property
     def n_slots(self) -> int:

@@ -82,8 +82,15 @@ def re_exchange(args, ctx):
     cycle = int(args.get("cycle", 0))
     temps = list(map(float, args["temps"]))
     losses = [None] * n
-    # primary source: the simulation tasks this exchange depends on
-    for res in (ctx.get("dep_results") or {}).values():
+    # primary source: the ports API — a "members" input port carrying the
+    # simulation stage's {task: result} dict (flow.StageFuture/Channel);
+    # fall back to raw task dependencies for un-annotated graphs
+    sources = []
+    for payload in (ctx.get("inputs") or {}).values():
+        if isinstance(payload, dict):
+            sources.extend(payload.values())
+    sources.extend((ctx.get("dep_results") or {}).values())
+    for res in sources:
         if isinstance(res, dict) and "member" in res and "loss" in res:
             losses[int(res["member"])] = float(res["loss"])
     explicit = args.get("losses")

@@ -36,6 +36,18 @@ def noop(args, ctx):
     return {}
 
 
+@register_kernel("synthetic.echo",
+                 description="returns `value` + any bound input ports")
+def echo(args, ctx):
+    """Data-flow probe: result carries the payload and whatever arrived on
+    the task's input ports (ctx["inputs"], see core/flow.py)."""
+    out = {"value": args.get("value")}
+    inputs = ctx.get("inputs") or {}
+    if inputs:
+        out["inputs"] = inputs
+    return out
+
+
 @register_kernel("synthetic.fail", idempotent=True,
                  description="fails `fail_times` times, then succeeds")
 def fail(args, ctx):

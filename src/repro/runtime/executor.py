@@ -101,10 +101,14 @@ class PilotRuntime:
 
     # ------------------------------------------------------------ elastic
     def resize(self, slots: int):
-        """Elastic pilot resize; takes effect at the next scheduling step."""
+        """Elastic pilot resize; takes effect at the next scheduling step.
+
+        Growing past the carved submesh count re-carves the topology (e.g.
+        2 pods -> 4 half-pods): validated here, applied at the first
+        scheduling step where no task holds a slot id.
+        """
         if self.topology is not None and slots > self.topology.n_slots:
-            raise ValueError(f"{slots} slots > {self.topology.n_slots} "
-                             "submeshes in the pilot topology")
+            self.topology.recarve(slots)      # raises if not re-carvable
         with self._lock:
             self._resize_to = slots
 
@@ -114,6 +118,15 @@ class PilotRuntime:
         with self._lock:
             if self._resize_to is None:
                 return 0
+            if self.topology is not None \
+                    and self._resize_to > self.topology.n_slots:
+                # re-carve only when every slot id is free: ids change
+                # meaning, so in-flight tasks must drain first (the resize
+                # stays pending and re-tries each scheduling step)
+                if len(self._free_ids) < self.topology.n_slots:
+                    return 0
+                self.topology = self.topology.recarve(self._resize_to)
+                self._free_ids = list(range(self.topology.n_slots))[::-1]
             delta = self._resize_to - self.slots
             self.slots = self._resize_to
             self._resize_to = None
@@ -204,6 +217,14 @@ class RuntimeSession:
         self._replayed_done, self._replayed_results = \
             runtime.journal.load_done()
 
+    @property
+    def busy_slots(self) -> int:
+        """Slots currently occupied by running tasks (live signal for
+        adaptive strategies; reads the drain thread's own accounting)."""
+        if self.rt.mode == "sim":
+            return self._busy
+        return self.rt.slots - self._free["n"]
+
     # ------------------------------------------------------------ submit
     def submit(self, tasks: Union[Task, Iterable[Task]], *,
                dynamic: bool = False) -> List[Task]:
@@ -275,9 +296,12 @@ class RuntimeSession:
 
     def _schedule_sim(self):
         rt, graph = self.rt, self.graph
-        ready = sorted(graph.ready(), key=lambda t: t.tid)
-        for t in ready:
+        while True:
+            t = graph.pop_ready()          # incremental frontier, tid order
+            if t is None:
+                break
             if rt.slots - self._busy < t.slots:
+                graph.requeue(t)           # same head-of-line rule as seed
                 break
             self._busy += t.slots
             rt._acquire_slots(t)
@@ -463,11 +487,22 @@ class RuntimeSession:
                     rt.on_schedule(rt, graph, None)
                 self._free["n"] += rt._apply_resize()   # elastic grow/shrink
                 t0 = time.perf_counter()
-                # re-check capacity per task: a single pass may admit
-                # several tasks, each draining free["n"]
-                scheduled = []
-                for t in graph.ready():
+                # pop from the incremental frontier, re-checking capacity
+                # per task; too-wide tasks are skipped (narrower ones behind
+                # them may fit) and requeued after the pass.  The min-width
+                # check ends the pass as soon as NOTHING left can fit —
+                # without it a nearly-full pilot would drain the whole
+                # frontier into `skipped` on every wakeup (O(n) per event)
+                scheduled, skipped = [], []
+                while True:
+                    min_w = graph.frontier_min_width()
+                    if min_w is None or min_w > self._free["n"]:
+                        break
+                    t = graph.pop_ready()
+                    if t is None:
+                        break
                     if t.slots > self._free["n"]:
+                        skipped.append(t)
                         continue
                     scheduled.append(t)
                     self._free["n"] -= t.slots
@@ -483,6 +518,8 @@ class RuntimeSession:
                                           args=(t,), daemon=True)
                     workers.append(th)
                     th.start()
+                for t in skipped:
+                    graph.requeue(t)
                 prof.t_rts_overhead += time.perf_counter() - t0
                 quiescent = not self._inflight and not self._cbq
                 if graph.done() and quiescent:

@@ -22,6 +22,14 @@ class Journal:
         if path:
             os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
             self._fh = open(path, "a", buffering=1)
+            # a crash can leave a torn final line with no newline; terminate
+            # it so records appended after restart parse on their own lines
+            # (the torn fragment itself is skipped by the replay parsers)
+            if self._fh.tell():
+                with open(path, "rb") as probe:
+                    probe.seek(-1, os.SEEK_END)
+                    if probe.read(1) != b"\n":
+                        self._fh.write("\n")
 
     def record(self, task, event: str, **extra):
         if self._fh is None:
@@ -37,6 +45,31 @@ class Journal:
             except (TypeError, ValueError):
                 pass             # non-JSON results replay as None
         rec.update(extra)
+        self._fh.write(json.dumps(rec, default=str) + "\n")
+
+    def record_flow(self, event: str, channel: str, producer: str,
+                    value=None, consumer: Optional[str] = None):
+        """Persist a data-flow event (core.flow): ``channel_put`` carries
+        the put value (when JSON-serializable), ``channel_take`` the
+        consumer->producer binding.  Replay uses these so coupled pipelines
+        see identical inputs after a restart."""
+        if self._fh is None:
+            return
+        rec = {"t": time.time(), "event": event, "channel": channel,
+               "producer": producer}
+        if consumer is not None:
+            rec["consumer"] = consumer
+        if event == "channel_put":
+            try:
+                # only values that survive the JSON round-trip UNCHANGED
+                # are authoritative on replay (a tuple would come back as
+                # a list — different type than the original run delivered);
+                # lossy payloads are omitted and the restart recomputes
+                # them from replayed task results
+                if json.loads(json.dumps(value)) == value:
+                    rec["value"] = value
+            except (TypeError, ValueError):
+                pass
         self._fh.write(json.dumps(rec, default=str) + "\n")
 
     def close(self):
@@ -66,6 +99,33 @@ class Journal:
                     if "result" in rec:
                         results[rec["task"]] = rec["result"]
         return done, results
+
+    def load_flow(self):
+        """Parse data-flow records: ``(puts, takes)`` where puts maps
+        ``(channel, producer_key) -> value`` and takes maps
+        ``(channel, consumer_key) -> producer_key`` (last record wins)."""
+        puts: Dict[tuple, object] = {}
+        takes: Dict[tuple, str] = {}
+        if not self.path or not os.path.exists(self.path):
+            return puts, takes
+        with open(self.path) as f:
+            for line in f:
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue  # torn write at crash: ignore
+                ev = rec.get("event")
+                if ev == "channel_put":
+                    # records without "value" (non-JSON payload) carry no
+                    # authoritative value: the restart recomputes the put
+                    # from replayed stage results instead
+                    if "value" in rec:
+                        puts[(rec["channel"], rec["producer"])] = \
+                            rec["value"]
+                elif ev == "channel_take":
+                    takes[(rec["channel"], rec["consumer"])] = \
+                        rec["producer"]
+        return puts, takes
 
     def replay(self, graph: TaskGraph) -> int:
         """Mark tasks recorded DONE as done; returns #skipped."""

@@ -1,7 +1,18 @@
-"""Task model: states, tasks, task graphs (the IR all patterns compile to)."""
+"""Task model: states, tasks, task graphs (the IR all patterns compile to).
+
+The TaskGraph maintains its ready frontier *incrementally*: every task keeps
+a count of unmet (not-DONE) dependencies and the graph keeps a min-heap of
+ready task names keyed by tid.  State transitions are observed through the
+``Task.state`` descriptor, so any ``t.state = ...`` write — scheduler,
+journal replay, speculative supersession — updates the frontier in O(log f)
+(f = frontier size) instead of the per-event full scan the seed used, which
+made a long session O(n²) in completion events.  ``ready()`` survives as a
+snapshot API; schedulers should use ``pop_ready()``/``requeue()``.
+"""
 from __future__ import annotations
 
 import enum
+import heapq
 import itertools
 import time
 from dataclasses import dataclass, field
@@ -57,18 +68,136 @@ class Task:
     speculative_of: Optional[str] = None
 
 
+def _task_state_get(self: Task) -> TaskState:
+    return self.__dict__["_state"]
+
+
+def _task_state_set(self: Task, new: TaskState):
+    old = self.__dict__.get("_state")
+    self.__dict__["_state"] = new
+    graph = self.__dict__.get("_graph")
+    if graph is not None and old is not new:
+        graph._on_state(self, old, new)
+
+
+# ``state`` stays a dataclass field (default/repr/eq all intact) but reads
+# and writes go through a property attached after class creation: once a
+# task is add()ed to a TaskGraph, EVERY state write notifies the graph so
+# the frontier and terminal count stay incremental — no call-site refactor,
+# no way to bypass the bookkeeping.
+Task.state = property(_task_state_get, _task_state_set)
+
+
 @dataclass
 class TaskGraph:
     tasks: Dict[str, Task] = field(default_factory=dict)
+
+    def __post_init__(self):
+        self._unmet: Dict[str, int] = {}       # name -> deps not yet DONE
+        self._waiters: Dict[str, List[str]] = {}   # dep name -> dependents
+        self._in_frontier: set = set()
+        self._heap: List = []                  # (tid, name), lazily pruned
+        self._width_counts: Dict[int, int] = {}    # slots -> frontier count
+        self._n_terminal = 0
+        for t in list(self.tasks.values()):    # pre-populated dict support
+            self._index(t)
 
     def add(self, task: Task) -> Task:
         if task.name in self.tasks:
             raise ValueError(f"duplicate task {task.name}")
         self.tasks[task.name] = task
+        self._index(task)
         return task
+
+    def _index(self, task: Task):
+        task.__dict__["_graph"] = self
+        unmet = 0
+        for d in task.deps:
+            dep = self.tasks.get(d)
+            if dep is None or dep.state != TaskState.DONE:
+                unmet += 1
+                self._waiters.setdefault(d, []).append(task.name)
+        self._unmet[task.name] = unmet
+        if task.state == TaskState.NEW:
+            if unmet == 0:
+                self._frontier_add(task)
+        elif task.state.terminal:
+            self._n_terminal += 1
+            if task.state == TaskState.DONE:
+                self._satisfy_waiters(task)
 
     def __len__(self):
         return len(self.tasks)
+
+    # ------------------------------------------------------------ frontier
+    def _frontier_add(self, task: Task):
+        if task.name not in self._in_frontier:
+            self._in_frontier.add(task.name)
+            heapq.heappush(self._heap, (task.tid, task.name))
+            w = task.slots
+            self._width_counts[w] = self._width_counts.get(w, 0) + 1
+
+    def _frontier_discard(self, task: Task):
+        if task.name in self._in_frontier:
+            self._in_frontier.discard(task.name)
+            w = task.slots
+            left = self._width_counts.get(w, 0) - 1
+            if left:
+                self._width_counts[w] = left
+            else:
+                self._width_counts.pop(w, None)
+
+    def frontier_min_width(self) -> Optional[int]:
+        """Narrowest slot width in the frontier (None when empty).  Lets a
+        scheduler skip a pass outright when nothing can fit the free
+        capacity, instead of scanning wide tasks (#widths is tiny)."""
+        return min(self._width_counts) if self._width_counts else None
+
+    def _satisfy_waiters(self, task: Task):
+        for wname in self._waiters.pop(task.name, ()):
+            left = self._unmet.get(wname)
+            if left is None:
+                continue
+            self._unmet[wname] = left - 1
+            w = self.tasks.get(wname)
+            if left == 1 and w is not None and w.state == TaskState.NEW:
+                self._frontier_add(w)
+
+    def _on_state(self, task: Task, old: Optional[TaskState],
+                  new: TaskState):
+        """Observer for every in-graph ``task.state`` write."""
+        was_terminal = old is not None and old.terminal
+        if new.terminal and not was_terminal:
+            self._n_terminal += 1
+        elif was_terminal and not new.terminal:
+            self._n_terminal -= 1
+        if new == TaskState.NEW:               # retry re-enters the frontier
+            if self._unmet.get(task.name, 0) == 0:
+                self._frontier_add(task)
+        else:
+            self._frontier_discard(task)
+        if new == TaskState.DONE and old != TaskState.DONE:
+            self._satisfy_waiters(task)
+
+    def pop_ready(self) -> Optional[Task]:
+        """Lowest-tid ready task, removed from the frontier (the caller
+        either schedules it or gives it back via :meth:`requeue`)."""
+        while self._heap:
+            tid, name = self._heap[0]
+            if name not in self._in_frontier:   # stale entry: lazily prune
+                heapq.heappop(self._heap)
+                continue
+            heapq.heappop(self._heap)
+            t = self.tasks[name]
+            self._frontier_discard(t)
+            return t
+        return None
+
+    def requeue(self, task: Task):
+        """Return a popped-but-unscheduled task to the frontier."""
+        if task.state == TaskState.NEW and \
+                self._unmet.get(task.name, 0) == 0:
+            self._frontier_add(task)
 
     def validate(self):
         for t in self.tasks.values():
@@ -94,10 +223,10 @@ class TaskGraph:
             raise ValueError("task graph has a cycle")
 
     def ready(self) -> List[Task]:
-        return [t for t in self.tasks.values()
-                if t.state == TaskState.NEW
-                and all(self.tasks[d].state == TaskState.DONE
-                        for d in t.deps)]
+        """Snapshot of the frontier in tid order (O(f log f), f = frontier
+        size — NOT O(n); kept for inspection/back-compat)."""
+        return sorted((self.tasks[n] for n in self._in_frontier),
+                      key=lambda t: t.tid)
 
     def done(self) -> bool:
-        return all(t.state.terminal for t in self.tasks.values())
+        return self._n_terminal == len(self.tasks)

@@ -83,12 +83,17 @@ def test_runtime_submesh_for_task():
     assert sorted(rt._free_ids) == list(range(len(devs)))
 
 
-def test_runtime_rejects_oversized_resize():
+def test_runtime_rejects_unrecarvable_resize():
+    """Growing past the carved submesh count re-carves (see the elastic
+    tests below) — but only when the slot axis divides evenly; slots of a
+    single device cannot split further."""
     from repro.runtime.executor import PilotRuntime
     rt = PilotRuntime(mode="sim", topology=SlotTopology.even(np.arange(4), 4))
     assert rt.slots == 4
-    with pytest.raises(ValueError, match="submeshes"):
+    with pytest.raises(ValueError, match="cannot split"):
         rt.resize(8)
+    with pytest.raises(ValueError, match="multiple"):
+        rt.resize(6)        # 6 is not a multiple of the 4 carved slots
 
 
 # ---------------------------------------------------------------- sharding

@@ -1,0 +1,553 @@
+"""Typed data-flow ports (core/flow.py): cross-pipeline coupling, the
+incremental frontier scheduler, journaled channel replay, elastic slot
+re-carving, and live per-pipeline adaptive strategy."""
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import (AppManager, Channel, Kernel, PipelineSpec, Stage,
+                        StageFuture, TaskSpec, TypedPortError)
+from repro.runtime.executor import PilotRuntime
+from repro.runtime.journal import Journal
+from repro.runtime.states import Task, TaskGraph, TaskState
+from repro.runtime.strategy import AdaptiveSlotStrategy
+
+
+def _k(sim_duration=0.0, cores=1):
+    k = Kernel("synthetic.noop")
+    k.sim_duration = sim_duration
+    k.cores = cores
+    return k
+
+
+def _echo(value=None, sim_duration=0.0):
+    k = Kernel("synthetic.echo")
+    k.arguments = {"value": value}
+    k.sim_duration = sim_duration
+    return k
+
+
+# -------------------------------------------------- channel coupling
+
+def _producer(ch, cycles=3, members=2, dur=4.0):
+    return PipelineSpec(
+        [Stage([TaskSpec(_k(dur), name=f"prod.c{c}.m{m}")
+                for m in range(members)],
+               name=f"cycle{c}", outputs=[ch])
+         for c in range(cycles)], name="producer")
+
+
+def test_channel_consumer_starts_before_producer_drains():
+    """The acceptance property: analysis round 0 runs while the producer
+    ensemble is still on later cycles — DAG-of-ensembles, not barriers."""
+    traj = Channel("traj")
+    prod = _producer(traj, cycles=3, members=2, dur=4.0)
+    ana = PipelineSpec(
+        [Stage([TaskSpec(_k(1.0), name=f"ana.r{c}")],
+               name=f"round{c}", inputs={"traj": traj})
+         for c in range(3)], name="analysis")
+    am = AppManager(PilotRuntime(slots=4, mode="sim"))
+    prof = am.run([prod, ana])
+    assert prof.n_failed == 0
+    pipes = prof.results["pipelines"]
+    assert pipes["producer"]["state"] == "done"
+    assert pipes["analysis"]["state"] == "done"
+    g = am.session.graph
+    # round 0 starts the moment cycle 0 completes (v=4), long before the
+    # producer drains (v=12)
+    assert g.tasks["ana.r0"].v_started == 4.0
+    prod_drained = max(t.v_finished for n, t in g.tasks.items()
+                      if n.startswith("prod.c2"))
+    assert g.tasks["ana.r0"].v_started < prod_drained
+    # FIFO: round c consumed cycle c's put
+    assert len(traj.puts) == 3 and len(traj._taken) == 3
+
+
+def test_channel_real_mode_delivers_stage_results():
+    """Consumers see the producing stage's {task: result} dict on their
+    declared port (ctx['inputs'])."""
+    ch = Channel("data")
+    prod = PipelineSpec(
+        [Stage([TaskSpec(_echo({"member": 0}), name="p0"),
+                TaskSpec(_echo({"member": 1}), name="p1")],
+               name="sim", outputs=[ch])], name="P")
+    cons = PipelineSpec(
+        [Stage([TaskSpec(_echo("ana"), name="c0")],
+               name="ana", inputs={"data": ch})], name="C")
+    prof = AppManager(PilotRuntime(slots=4, mode="real")).run([prod, cons])
+    assert prof.n_failed == 0
+    got = prof.results["tasks"]["c0"]["inputs"]["data"]
+    assert got == {"p0": {"value": {"member": 0}},
+                   "p1": {"value": {"member": 1}}}
+
+
+def test_stage_future_cross_pipeline_edge():
+    """A StageFuture couples a consumer to ONE named stage of another
+    pipeline via direct task dependencies."""
+    sim = Stage([TaskSpec(_k(5.0), name=f"a.m{m}") for m in range(2)],
+                name="sim")
+    tail = Stage([TaskSpec(_k(20.0), name="a.tail")], name="tail")
+    A = PipelineSpec([sim, tail], name="A")
+    B = PipelineSpec(
+        [Stage([TaskSpec(_k(1.0), name="b.ana")], name="ana",
+               inputs={"members": sim.future()})], name="B")
+    am = AppManager(PilotRuntime(slots=4, mode="sim"))
+    prof = am.run([A, B])
+    assert prof.n_failed == 0
+    g = am.session.graph
+    assert sorted(g.tasks["b.ana"].deps) == ["a.m0", "a.m1"]
+    # consumer ran right after the producer stage, inside A's lifetime
+    assert g.tasks["b.ana"].v_started == 5.0
+    assert g.tasks["a.tail"].v_finished == 25.0
+
+
+def test_future_of_later_stage_parks_until_submitted():
+    """Consuming a stage the producer pipeline has not reached yet parks
+    the consumer; it wakes when the stage is submitted."""
+    s0 = Stage([TaskSpec(_k(10.0), name="a.s0")], name="s0")
+    s1 = Stage([TaskSpec(_k(10.0), name="a.s1")], name="s1")
+    A = PipelineSpec([s0, s1], name="A")
+    B = PipelineSpec(
+        [Stage([TaskSpec(_k(1.0), name="b.c")], name="c",
+               inputs={"x": s1.future()})], name="B")
+    am = AppManager(PilotRuntime(slots=4, mode="sim"))
+    prof = am.run([A, B])
+    assert prof.n_failed == 0
+    g = am.session.graph
+    assert g.tasks["b.c"].deps == ["a.s1"]
+    assert g.tasks["b.c"].v_started == 20.0
+    assert prof.results["pipelines"]["B"]["state"] == "done"
+
+
+def test_unfed_consumer_reported_blocked():
+    ch = Channel("never")
+    good = PipelineSpec([Stage([TaskSpec(_k(1.0))], name="s")], name="good")
+    stuck = PipelineSpec(
+        [Stage([TaskSpec(_k(1.0))], name="s", inputs={"x": ch})],
+        name="stuck")
+    prof = AppManager(PilotRuntime(slots=2, mode="sim")).run([good, stuck])
+    assert prof.results["pipelines"]["good"]["state"] == "done"
+    assert prof.results["pipelines"]["stuck"]["state"] == "blocked"
+    assert prof.results["pipelines"]["stuck"]["waiting_on"] == "channel:never"
+
+
+def test_typed_channel_rejects_wrong_payload():
+    ch = Channel("typed", dtype=dict)
+    with pytest.raises(TypedPortError, match="expects dict"):
+        ch.put("p", {"t0": 3})          # a non-dict task result
+    ch.put("p", {"t0": {"ok": 1}})      # dict results pass
+    assert ch.has_put("p")
+
+
+def test_typed_channel_usable_in_sim_mode():
+    """DES tasks produce None results; a typed channel must not reject the
+    placeholder payloads (no data flows in sim)."""
+    ch = Channel("typed", dtype=dict)
+    prod = PipelineSpec([Stage([TaskSpec(_k(1.0))], name="s",
+                               outputs=[ch])], name="P")
+    cons = PipelineSpec([Stage([TaskSpec(_k(1.0))], name="a",
+                               inputs={"t": ch})], name="C")
+    prof = AppManager(PilotRuntime(slots=2, mode="sim")).run([prod, cons])
+    assert prof.n_failed == 0
+    assert prof.results["pipelines"]["C"]["state"] == "done"
+
+
+def test_journal_omits_json_lossy_put_values():
+    """A tuple journals as a JSON array and would replay as a list —
+    lossy values must be omitted so the restart recomputes them."""
+    with tempfile.TemporaryDirectory() as d:
+        j = Journal(os.path.join(d, "j.jsonl"))
+        j.record_flow("channel_put", "c", "p0", value=(1, 2))   # lossy
+        j.record_flow("channel_put", "c", "p1", value=[1, 2])   # exact
+        j.close()
+        puts, _ = Journal(os.path.join(d, "j.jsonl")).load_flow()
+        assert ("c", "p0") not in puts
+        assert puts[("c", "p1")] == [1, 2]
+
+
+def test_task_level_ports_stream_per_task():
+    """TaskSpec outputs put each task's bare result; TaskSpec inputs take
+    one put per task (finer than stage granularity)."""
+    ch = Channel("stream")
+    prod = PipelineSpec(
+        [Stage([TaskSpec(_echo(i, 1.0), name=f"p{i}", outputs=[ch])
+                for i in range(3)], name="sim")], name="P")
+    cons = PipelineSpec(
+        [Stage([TaskSpec(_echo("c", 1.0), name=f"c{i}",
+                         inputs={"v": ch}) for i in range(3)],
+               name="ana")], name="C")
+    am = AppManager(PilotRuntime(slots=6, mode="real"))
+    prof = am.run([prod, cons])
+    assert prof.n_failed == 0
+    assert len(ch.puts) == 3
+    vals = sorted(prof.results["tasks"][f"c{i}"]["inputs"]["v"]["value"]
+                  for i in range(3))
+    assert vals == [0, 1, 2]
+
+
+def test_two_consumers_fifo_work_queue():
+    """Two consumer pipelines on one channel split the stream: each put is
+    consumed exactly once, in order."""
+    ch = Channel("q")
+    prod = _producer(ch, cycles=4, members=1, dur=1.0)
+    consumers = [
+        PipelineSpec([Stage([TaskSpec(_k(0.5), name=f"{w}.r{c}")],
+                            name=f"r{c}", inputs={"q": ch})
+                      for c in range(2)], name=w)
+        for w in ("w0", "w1")]
+    prof = AppManager(PilotRuntime(slots=4, mode="sim")).run(
+        [prod] + consumers)
+    assert prof.n_failed == 0
+    assert len(ch.puts) == 4 and len(ch._taken) == 4
+    for w in ("w0", "w1"):
+        assert prof.results["pipelines"][w]["state"] == "done"
+
+
+def test_channel_name_collision_rejected():
+    a, b = Channel("same"), Channel("same")
+    prod = PipelineSpec([Stage([TaskSpec(_k(1.0))], name="s",
+                               outputs=[a])], name="P")
+    cons = PipelineSpec([Stage([TaskSpec(_k(1.0))], name="s",
+                               inputs={"x": b})], name="C")
+    with pytest.raises(ValueError, match="two different Channel"):
+        AppManager(PilotRuntime(slots=2, mode="sim")).run([prod, cons])
+
+
+# -------------------------------------------------- journal replay
+
+def _coupled_real(journal_path, probe):
+    """Producer (2 cycles) -> analysis (2 rounds) over a journaled real
+    runtime; ``probe`` collects (task, inputs) pairs from analysis."""
+    rt = PilotRuntime(slots=4, mode="real",
+                      journal=Journal(journal_path))
+    traj = Channel("traj")
+
+    def ana_kernel(r):
+        k = Kernel("synthetic.echo")
+        k.arguments = {"value": f"round{r}"}
+        k.download_output_data = [
+            lambda res, _r=r: probe.append((_r, res.get("inputs")))]
+        return k
+
+    prod = PipelineSpec(
+        [Stage([TaskSpec(_echo({"cycle": c, "member": m}),
+                         name=f"prod.c{c}.m{m}") for m in range(2)],
+               name=f"cycle{c}", outputs=[traj])
+         for c in range(2)], name="producer")
+    ana = PipelineSpec(
+        [Stage([TaskSpec(ana_kernel(r), name=f"ana.r{r}")],
+               name=f"round{r}", inputs={"traj": traj})
+         for r in range(2)], name="analysis")
+    am = AppManager(rt)
+    prof = am.run([prod, ana])
+    rt.journal.close()
+    return prof, traj
+
+
+def test_journal_replays_channel_puts_full_restart():
+    """Full-journal restart: nothing re-executes (so the download probe
+    stays silent) and the channels repopulate with the IDENTICAL puts and
+    consumer bindings from the journal."""
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "j.jsonl")
+        probe1, probe2 = [], []
+        prof1, traj1 = _coupled_real(path, probe1)
+        assert prof1.n_failed == 0 and len(probe1) == 2
+
+        n_lines = len(open(path).read().splitlines())
+        prof2, traj2 = _coupled_real(path, probe2)
+        assert prof2.n_failed == 0
+        assert probe2 == []                # nothing re-executed
+        assert traj2.puts == traj1.puts    # identical replayed channel state
+        assert traj2._taken == traj1._taken
+        recs = [json.loads(ln) for ln in open(path)]
+        # no task re-executed: no new "scheduled" records after restart
+        assert not [r for r in recs[n_lines:] if r.get("event") == "scheduled"]
+        puts = [r for r in recs if r.get("event") == "channel_put"]
+        assert {(p["channel"], p["producer"]) for p in puts} == {
+            ("traj", "producer:0000"), ("traj", "producer:0001")}
+
+
+def test_journal_replays_channel_puts_midstream_crash():
+    """Kill a coupled run mid-stream (truncate the journal to cycle 0's
+    records), reload: consumer round 0 sees the IDENTICAL input via the
+    journaled put + take, and cycle-0 tasks do not re-execute."""
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "j.jsonl")
+        probe1, probe2 = [], []
+        prof1, traj1 = _coupled_real(path, probe1)
+        assert prof1.n_failed == 0 and len(probe1) == 2
+
+        # crash simulation: keep only cycle-0/round-0 records + torn line
+        keep = []
+        for ln in open(path).read().splitlines():
+            rec = json.loads(ln)
+            tag = rec.get("task", "") + rec.get("producer", "") \
+                + rec.get("consumer", "")
+            if ("c1" not in tag and "r1" not in tag
+                    and "0001" not in tag):
+                keep.append(ln)
+        with open(path, "w") as f:
+            f.write("\n".join(keep) + '\n{"task": "prod.c1.m0", "ev')
+
+        prof2, traj2 = _coupled_real(path, probe2)
+        assert prof2.n_failed == 0
+        # round 1 re-executed and saw byte-identical inputs; round 0
+        # replayed (silent probe) with its put/take restored verbatim
+        assert probe2 == [probe1[1]]
+        assert traj2.puts[0] == traj1.puts[0]
+        assert len(traj2.puts) == 2 and len(traj2._taken) == 2
+        recs = []
+        for ln in open(path):
+            try:
+                recs.append(json.loads(ln))
+            except json.JSONDecodeError:
+                pass                       # the torn crash line
+        sched = [r["task"] for r in recs if r.get("event") == "scheduled"]
+        # every task was scheduled exactly once across crash + restart:
+        # cycle 0 / round 0 before the crash (their post-crash records were
+        # truncated away would show a duplicate), cycle 1 / round 1 after
+        assert sorted(sched) == ["ana.r0", "ana.r1", "prod.c0.m0",
+                                 "prod.c0.m1", "prod.c1.m0", "prod.c1.m1"]
+
+
+# -------------------------------------------------- incremental frontier
+
+def test_frontier_tracks_deps_incrementally():
+    g = TaskGraph()
+    a = g.add(Task(name="a"))
+    b = g.add(Task(name="b", deps=["a"]))
+    c = g.add(Task(name="c", deps=["a", "b"]))
+    assert [t.name for t in g.ready()] == ["a"]
+    assert g.pop_ready() is a and g.pop_ready() is None
+    a.state = TaskState.RUNNING
+    a.state = TaskState.DONE
+    assert g.pop_ready() is b
+    b.state = TaskState.DONE               # c's last dep satisfied
+    assert [t.name for t in g.ready()] == ["c"]
+    assert not g.done()
+    c.state = TaskState.CANCELED
+    assert g.done()
+
+
+def test_frontier_requeue_and_retry_reentry():
+    g = TaskGraph()
+    a = g.add(Task(name="a"))
+    t = g.pop_ready()
+    g.requeue(t)
+    assert g.pop_ready() is a              # requeued, not lost
+    a.state = TaskState.RUNNING
+    assert g.pop_ready() is None
+    a.state = TaskState.NEW                # retry path re-enters frontier
+    assert g.pop_ready() is a
+
+
+def test_frontier_dep_satisfied_before_dependent_added():
+    g = TaskGraph()
+    a = g.add(Task(name="a"))
+    a.state = TaskState.DONE
+    b = g.add(Task(name="b", deps=["a"]))  # dep already DONE at add()
+    assert g.pop_ready() is b
+    assert g.ready() == []
+
+
+def test_frontier_matches_full_scan_under_random_schedules():
+    rng = np.random.default_rng(7)
+    g = TaskGraph()
+    tasks = []
+    for i in range(120):
+        deps = [f"t{j}"
+                for j in rng.choice(i, rng.integers(0, min(i, 3)), False)] \
+            if i else []
+        tasks.append(g.add(Task(name=f"t{i}", deps=deps)))
+    done = set()
+    while True:
+        frontier = {t.name for t in g.ready()}
+        scan = {t.name for t in tasks
+                if t.state == TaskState.NEW
+                and all(g.tasks[d].state == TaskState.DONE for d in t.deps)}
+        assert frontier == scan
+        if not frontier:
+            break
+        pick = sorted(frontier)[int(rng.integers(len(frontier)))]
+        g.tasks[pick].state = TaskState.RUNNING
+        g.tasks[pick].state = TaskState.DONE
+        done.add(pick)
+    assert len(done) == 120 and g.done()
+
+
+def test_frontier_min_width_tracking():
+    """The scheduler's fast-path signal: narrowest ready width, maintained
+    through pops, requeues and completions."""
+    g = TaskGraph()
+    wide = g.add(Task(name="w", slots=4))
+    g.add(Task(name="n", slots=1, deps=["w"]))
+    assert g.frontier_min_width() == 4
+    t = g.pop_ready()
+    assert g.frontier_min_width() is None   # popped: out of the frontier
+    g.requeue(t)
+    assert g.frontier_min_width() == 4
+    wide.state = TaskState.RUNNING
+    wide.state = TaskState.DONE             # unblocks the narrow task
+    assert g.frontier_min_width() == 1
+    g.tasks["n"].state = TaskState.RUNNING
+    assert g.frontier_min_width() is None
+
+
+def test_real_mode_mixed_width_admits_narrow_behind_wide():
+    """A narrow task queued (by tid) behind wide ones must still run while
+    the wide ones wait for capacity."""
+    import time as _time
+    g = TaskGraph()
+    for i in range(3):
+        g.add(Task(name=f"wide{i}", slots=2,
+                   run=lambda t: _time.sleep(0.05)))
+    g.add(Task(name="narrow", slots=1, run=lambda t: 1))
+    prof = PilotRuntime(slots=3, mode="real").run(g)
+    assert prof.n_failed == 0
+    assert all(t.state == TaskState.DONE for t in g.tasks.values())
+    assert g.tasks["narrow"].result == 1
+
+
+# -------------------------------------------------- elastic re-carving
+
+def _topo(n_slots, per_slot):
+    from repro.dist.topology import SlotTopology
+    return SlotTopology(np.arange(n_slots * per_slot)
+                        .reshape(n_slots, per_slot), ("model",))
+
+
+def test_recarve_splits_slot_axis():
+    topo = _topo(2, 4)
+    fine = topo.recarve(4)
+    assert fine.n_slots == 4
+    assert fine.devices_per_slot == 2
+    # halves stay contiguous: slot 0+1 together cover old slot 0
+    np.testing.assert_array_equal(
+        np.concatenate([fine.devices[0], fine.devices[1]]), topo.devices[0])
+    assert fine.axis_names == topo.axis_names
+    with pytest.raises(ValueError, match="multiple"):
+        topo.recarve(3)
+    with pytest.raises(ValueError, match="grow-only"):
+        topo.recarve(1)
+
+
+def test_runtime_grow_recarves_topology():
+    rt = PilotRuntime(mode="sim", topology=_topo(2, 4))
+    g = TaskGraph()
+    for i in range(2):
+        g.add(Task(name=f"w{i}", duration=10.0))
+    for i in range(4):
+        g.add(Task(name=f"n{i}", duration=10.0, deps=["w0", "w1"]))
+    fired = []
+
+    def grow(rt_, graph, vnow):
+        if vnow is not None and vnow >= 10.0 and not fired:
+            fired.append(vnow)
+            rt_.resize(4)
+
+    rt.on_schedule = grow
+    prof = rt.run(g)
+    # wave 1: 2 wide slots; after re-carve 2 pods -> 4 half-pods the four
+    # narrow tasks run concurrently
+    assert prof.ttc == 20.0
+    assert rt.slots == 4 and rt.topology.n_slots == 4
+    assert rt.topology.devices_per_slot == 2
+    assert sorted(rt._free_ids) == list(range(4))
+    for i in range(4):
+        assert len(rt.topology.slot_devices(
+            g.tasks[f"n{i}"].meta["slot_ids"]).ravel()) == 2
+
+
+def test_recarve_defers_until_slots_free():
+    """resize() past the carved count while tasks hold slot ids stays
+    pending; capacity is unchanged until the holders drain."""
+    rt = PilotRuntime(mode="sim", topology=_topo(2, 2))
+    g = TaskGraph()
+    g.add(Task(name="hold", duration=10.0))
+    g.add(Task(name="a", duration=5.0))
+    g.add(Task(name="later", duration=5.0, deps=["hold"]))
+
+    def grow(rt_, graph, vnow):
+        if vnow == 0.0:
+            rt_.resize(4)      # requested while both slots are about to fill
+
+    rt.on_schedule = grow
+    prof = rt.run(g)
+    assert rt.slots == 4 and rt.topology.n_slots == 4
+    assert prof.ttc == 15.0
+    assert sorted(rt._free_ids) == list(range(4))
+
+
+# -------------------------------------------------- live adaptive strategy
+
+def test_strategy_fed_per_pipeline_backlog_live():
+    """The pilot grows INTO a backlog at a stage boundary mid-session and
+    shrinks again when the queues drain — driven by per-pipeline depth,
+    within one AppManager session (not between runs)."""
+    seen = []
+
+    class Spy(AdaptiveSlotStrategy):
+        def apply(self, pilot, *, utilization, backlog, per_pipeline=None):
+            seen.append(dict(per_pipeline or {}))
+            return super().apply(pilot, utilization=utilization,
+                                 backlog=backlog,
+                                 per_pipeline=per_pipeline)
+
+    rt = PilotRuntime(slots=2, mode="sim")
+    strat = Spy(min_slots=2, max_slots=8)
+    pipe = PipelineSpec(
+        [Stage([TaskSpec(_k(5.0), name="seed")], name="s0"),
+         Stage([TaskSpec(_k(10.0), name=f"wide{i}") for i in range(8)],
+               name="s1")], name="p")
+    am = AppManager(rt, strategy=strat)
+    prof = am.run(pipe)
+    assert prof.n_failed == 0
+    # stage-0 completion saw the 8 queued wide tasks and grew 2 -> 4;
+    # the wide stage then ran in two 4-task waves
+    assert seen[0] == {"p": 8}
+    assert prof.ttc == 5.0 + 20.0
+    # final stage completion: no active pipelines, queues empty -> shrink
+    assert seen[-1] == {}
+    assert rt.slots == 2
+
+
+def test_strategy_holds_width_on_unrecarvable_grow():
+    """An adaptive grow decision the slot topology cannot grant (not a
+    re-carvable multiple) must HOLD the current width, not crash the
+    session from inside the completion callback."""
+    rt = PilotRuntime(mode="sim", topology=_topo(2, 1))   # 2 unsplittable
+    strat = AdaptiveSlotStrategy(min_slots=2, max_slots=16)
+    pipe = PipelineSpec(
+        [Stage([TaskSpec(_k(5.0), name="seed")], name="s0"),
+         Stage([TaskSpec(_k(10.0), name=f"q{i}") for i in range(3)],
+               name="s1")], name="p")
+    prof = AppManager(rt, strategy=strat).run(pipe)
+    assert prof.n_failed == 0
+    # decide() wanted 3 slots (backlog 3 > 2); infeasible -> stayed at 2
+    assert rt.slots == 2
+    assert prof.ttc == 5.0 + 20.0
+
+
+def test_blocked_pipeline_stays_blocked_across_runs():
+    """A pipeline blocked when its session drained must NOT be woken into
+    a later run's fresh session (its stage deps name dead tasks)."""
+    ch = Channel("late")
+    am = AppManager(PilotRuntime(slots=2, mode="sim"))
+    consumer = PipelineSpec(
+        [Stage([TaskSpec(_k(1.0))], name="s0"),
+         Stage([TaskSpec(_k(1.0))], name="s1", inputs={"x": ch})],
+        name="consumer")
+    prof = am.run(consumer)
+    assert prof.results["pipelines"]["consumer"]["state"] == "blocked"
+
+    producer = PipelineSpec(
+        [Stage([TaskSpec(_k(1.0))], name="s0", outputs=[ch])],
+        name="producer")
+    prof = am.run(producer)           # the put must not resurrect consumer
+    assert prof.n_failed == 0
+    assert prof.results["pipelines"]["producer"]["state"] == "done"
+    assert prof.results["pipelines"]["consumer"]["state"] == "blocked"
