@@ -87,24 +87,48 @@ class Channel:
 
     Producers are stages (put value = the stage's ``{task: result}`` dict)
     or single tasks (put value = the task's result).  ``dtype``, when set,
-    is enforced per task result at put time.  Consumption is a FIFO
-    work-queue: each consumer binding takes the oldest untaken put exactly
-    once.  A Channel belongs to one AppManager run topology; names must be
-    unique within it.
+    is enforced per task result at put time.  A Channel belongs to one
+    AppManager run topology; names must be unique within it.
+
+    Consumption modes:
+
+      fifo (default)  work-queue: each consumer binding takes the oldest
+                      untaken put exactly once — N consumers SPLIT the
+                      stream.
+      broadcast       each consumer *stream* (one pipeline's successive
+                      bindings of the port) keeps its own cursor over
+                      EVERY put — N analysis ensembles each see every
+                      trajectory.  Staged refs (repro.staging) make the
+                      fan-out cheap: one blob, N takes.
+
+    ``capacity`` declares back-pressure: the AppManager parks a producer
+    pipeline whose next stage would put onto a channel already holding
+    ``capacity`` unconsumed puts, and wakes it on the next take (default
+    None: unbounded, the historical behavior).
     """
 
-    def __init__(self, name: str, dtype: Optional[type] = None):
+    def __init__(self, name: str, dtype: Optional[type] = None, *,
+                 capacity: Optional[int] = None, mode: str = "fifo"):
         if not name:
             raise ValueError("channel needs a non-empty name")
+        if mode not in ("fifo", "broadcast"):
+            raise ValueError(f"channel mode must be fifo|broadcast, "
+                             f"got {mode!r}")
+        if capacity is not None and capacity < 1:
+            raise ValueError("channel capacity must be >= 1")
         self.name = name
         self.dtype = dtype
+        self.capacity = capacity
+        self.mode = mode
         self.puts: List[Tuple[str, Any]] = []   # (producer_key, value)
         self._index: Dict[str, int] = {}        # producer_key -> put index
-        self._taken: set = set()                # consumed put indices
+        self._taken: set = set()                # consumed put indices (fifo)
         self._scan_from = 0                     # first possibly-untaken idx
         # puts pre-bound to a consumer by journal replay (producer_key ->
         # consumer_key): invisible to fresh FIFO takes
         self._reserved: Dict[str, str] = {}
+        # broadcast: consumer stream -> index of its next unread put
+        self._cursors: Dict[str, int] = {}
 
     @property
     def port(self) -> Port:
@@ -158,14 +182,49 @@ class Channel:
                 continue                        # held for a replayed taker
             yield i
 
-    def n_available(self, consumer_key: str) -> int:
-        """Puts a fresh (non-replayed) take by ``consumer_key`` could bind."""
+    def n_available(self, consumer_key: str,
+                    stream: Optional[str] = None) -> int:
+        """Puts a fresh (non-replayed) take by ``consumer_key`` could bind.
+        Broadcast channels count from the consumer stream's own cursor."""
+        if self.mode == "broadcast":
+            return len(self.puts) - self._cursors.get(
+                stream or consumer_key, 0)
         return sum(1 for _ in self._fifo_candidates(consumer_key))
 
-    def take(self, consumer_key: str,
-             producer_key: Optional[str] = None) -> Tuple[str, Any]:
+    def touch(self, stream: str):
+        """Register a broadcast consumer stream (cursor at 0) so
+        back-pressure counts it before its first take."""
+        if self.mode == "broadcast":
+            self._cursors.setdefault(stream, 0)
+
+    def n_unconsumed(self) -> int:
+        """Puts nobody has consumed yet — the back-pressure signal.
+        Broadcast counts from the SLOWEST registered stream's cursor."""
+        if self.mode == "broadcast":
+            return len(self.puts) - (min(self._cursors.values())
+                                     if self._cursors else 0)
+        return len(self.puts) - len(self._taken)
+
+    def take(self, consumer_key: str, producer_key: Optional[str] = None,
+             stream: Optional[str] = None) -> Tuple[str, Any]:
         """Consume one put: the journaled producer when replaying, else the
-        oldest untaken put.  Returns ``(producer_key, value)``."""
+        oldest untaken put (fifo) / the stream's cursor (broadcast).
+        Returns ``(producer_key, value)``."""
+        if self.mode == "broadcast":
+            s = stream or consumer_key
+            if producer_key is not None:
+                idx = self._index.get(producer_key)
+                if idx is None:
+                    raise LookupError(
+                        f"channel {self.name!r}: put from {producer_key!r} "
+                        "not available for replayed take")
+            else:
+                idx = self._cursors.get(s, 0)
+                if idx >= len(self.puts):
+                    raise LookupError(
+                        f"channel {self.name!r}: no put available")
+            self._cursors[s] = max(self._cursors.get(s, 0), idx + 1)
+            return self.puts[idx]
         if producer_key is not None:
             idx = self._index.get(producer_key)
             if idx is None or idx in self._taken:
@@ -180,8 +239,10 @@ class Channel:
         return self.puts[idx]
 
     def __repr__(self):
-        return (f"Channel({self.name!r}, {len(self.puts)} puts, "
-                f"{len(self._taken)} taken)")
+        consumed = (f"{len(self._cursors)} streams"
+                    if self.mode == "broadcast"
+                    else f"{len(self._taken)} taken")
+        return f"Channel({self.name!r}, {len(self.puts)} puts, {consumed})"
 
 
 class StageFuture:

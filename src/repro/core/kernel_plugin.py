@@ -65,25 +65,41 @@ class Kernel:
         self.cores: int = 1
         self.uses_mpi: bool = False      # multi-chip (submesh-wide) task
         self.sim_duration: Optional[float] = None   # DES-mode duration
+        # declared result size: lets the staging layer (repro.staging)
+        # model this kernel's output traffic in DES mode, where no real
+        # payload exists to measure
+        self.output_nbytes: Optional[int] = None
         self.timings = {"data_in": 0.0, "data_out": 0.0, "exec": 0.0}
 
     # ------------------------------------------------------------ execute
     def execute(self, ctx: Optional[Dict[str, Any]] = None) -> Any:
-        """Run the kernel: stage data in, execute, stage data out."""
+        """Run the kernel: stage data in, execute, stage data out.
+
+        When a staging layer manages the run (``ctx["staging_managed"]``,
+        set by the PST AppManager on a pilot built with
+        ``staging=StagingLayer(...)``), the upload/download phases are
+        skipped here: inputs were content-address-staged and dereferenced
+        to the task's pod between ``pop_ready`` and launch (arriving as
+        ``ctx["staged_inputs"]``), and ``stage_out`` callables run —
+        charged to ``t_data`` — after completion."""
         ctx = dict(ctx or {})
+        managed = bool(ctx.get("staging_managed"))
         t0 = time.perf_counter()
-        staged = [u() if callable(u) else u for u in self.upload_input_data]
+        if not managed:
+            staged = [u() if callable(u) else u
+                      for u in self.upload_input_data]
+            ctx.setdefault("staged_inputs", staged)
         self.timings["data_in"] = time.perf_counter() - t0
-        ctx.setdefault("staged_inputs", staged)
 
         t1 = time.perf_counter()
         result = self._def.fn(self.arguments, ctx)
         self.timings["exec"] = time.perf_counter() - t1
 
         t2 = time.perf_counter()
-        for d in self.download_output_data:
-            if callable(d):
-                d(result)
+        if not managed:
+            for d in self.download_output_data:
+                if callable(d):
+                    d(result)
         self.timings["data_out"] = time.perf_counter() - t2
         return result
 

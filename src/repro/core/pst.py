@@ -60,6 +60,8 @@ from repro.core import flow
 from repro.core.flow import Channel, StageFuture
 from repro.core.kernel_plugin import Kernel
 from repro.runtime.states import Task, TaskState
+from repro.staging.ports import TaskStagingView, decode_refs, encode_refs
+from repro.staging.store import StagedRef
 
 _MISSING = object()
 
@@ -118,12 +120,30 @@ class TaskSpec:
     put for this task alone; an output Channel receives this task's bare
     result the moment the task finishes (finer-grained streaming than the
     stage-level ports, which move ``{task: result}`` dicts per stage).
+
+    ``stage_in``/``stage_out`` are data-staging declarations (values or
+    callables / result-consuming callables).  They default to the kernel's
+    legacy ``upload_input_data``/``download_output_data`` fields — the
+    compile path from the 2016 staging directives — and are acted on only
+    when the pilot runs with a ``repro.staging.StagingLayer``: inputs are
+    content-address-staged ONCE (N members sharing a blob link it), moved
+    to each task's pod between ``pop_ready`` and launch, and delivered as
+    ``ctx["staged_inputs"]``; every move is charged to ``t_data``.
+    Without staging the kernel handles its own lists, exactly as before.
     """
     kernel: Kernel
     name: str = ""
     metadata: Dict[str, Any] = field(default_factory=dict)
     inputs: Any = None
     outputs: Any = None
+    stage_in: Any = None
+    stage_out: Any = None
+
+    def __post_init__(self):
+        if self.stage_in is None:
+            self.stage_in = self.kernel.upload_input_data
+        if self.stage_out is None:
+            self.stage_out = self.kernel.download_output_data
 
 
 class Stage:
@@ -145,6 +165,7 @@ class Stage:
     def __init__(self, tasks: Iterable[Union[TaskSpec, Kernel]] = (), *,
                  name: str = "",
                  inputs: Any = None, outputs: Any = None,
+                 stage_in: Any = None, stage_out: Any = None,
                  on_done: Optional[Callable[["Stage", "PipelineSpec"],
                                             Any]] = None):
         self.name = name
@@ -152,6 +173,11 @@ class Stage:
             t if isinstance(t, TaskSpec) else TaskSpec(t) for t in tasks]
         self.inputs = inputs
         self.outputs = outputs
+        # stage-level staging declarations: shared by EVERY task of the
+        # stage (one content-addressed blob, N links); out-callables run
+        # once with the stage's {task: result} dict
+        self.stage_in = list(stage_in) if stage_in else []
+        self.stage_out = list(stage_out) if stage_out else []
         self.on_done = on_done
         self.results: Dict[str, Any] = {}
         self.n_failed = 0
@@ -239,6 +265,10 @@ class AppManager:
             self.runtime = pilot
         self.profile = profile if profile is not None else ExecutionProfile()
         self.strategy = strategy
+        # the pilot's staging layer (repro.staging), when configured:
+        # large channel puts become StagedRefs, dereferenced back into
+        # ctx["inputs"] between pop_ready and kernel launch
+        self.staging = getattr(self.runtime, "staging", None)
         self._kernels: Dict[str, Kernel] = {}
         self._task_index: Dict[str, _PipelineRun] = {}
         self._stage_of: Dict[str, Stage] = {}
@@ -255,6 +285,13 @@ class AppManager:
         self._parked: Dict[Any, List[_PipelineRun]] = {}
         self._replayed_puts: Optional[Dict] = None
         self._replayed_takes: Optional[Dict] = None
+        # wakes raised while a stage is mid-submission are DEFERRED until
+        # the outermost submission completes: a wake delivered between two
+        # of a stage's counted takes could reentrantly submit another
+        # consumer that steals the puts this stage's blocker check already
+        # counted (-> LookupError mid-bind)
+        self._advance_depth = 0
+        self._pending_wakes: List[Any] = []
 
     # ------------------------------------------------------------ build
     def _make_run(self, kernel: Kernel, stage: Stage):
@@ -269,18 +306,38 @@ class AppManager:
             if self.runtime.topology is not None \
                     and task.meta.get("slot_ids"):
                 ctx["submesh"] = self.runtime.submesh_for(task)
+            if self.staging is not None:
+                ctx["staging_managed"] = True
+                ctx["staging"] = TaskStagingView(self.staging, task)
+                # always present under management, as the unmanaged
+                # kernel path guarantees (kernels index it unconditionally)
+                ctx["staged_inputs"] = task.meta.get("staged_in_values",
+                                                     [])
             return _k.execute(ctx)
 
         return run
 
+    def _resolve_ref(self, task: Task, value: Any) -> Any:
+        """Top-level staged refs bound to a port dereference to the value
+        the stage-in pass landed at this task's pod; refs NESTED inside a
+        payload stay lazy (a consumer reading only scalar fields never
+        pays for the bulk ones — it derefs via ``ctx["staging"]``)."""
+        if self.staging is not None and isinstance(value, StagedRef):
+            return self.staging.resolve(task, value)
+        return value
+
     def _bound_inputs_for(self, task: Task, stage: Stage) -> Dict[str, Any]:
         """Concrete port values for one task: channel takes were bound at
-        submission; StageFuture ports resolve now (their producer tasks are
-        dependencies, so the results are complete by execution time)."""
-        inputs = dict(stage.bound_inputs)
+        submission (staged refs dereference here, after the executor's
+        stage-in pass moved them pod-local); StageFuture ports resolve now
+        (their producer tasks are dependencies, so the results are
+        complete by execution time)."""
+        inputs = {p: self._resolve_ref(task, v)
+                  for p, v in stage.bound_inputs.items()}
         for port, fut in stage._future_ports:
             inputs[port] = dict(fut.stage.results)
-        inputs.update(self._task_bound.get(task.name, {}))
+        for p, v in self._task_bound.get(task.name, {}).items():
+            inputs[p] = self._resolve_ref(task, v)
         for port, fut in self._task_futures.get(task.name, ()):
             inputs[port] = dict(fut.stage.results)
         return inputs
@@ -306,6 +363,8 @@ class AppManager:
                  if kk not in ("instance", "iteration")}
         if extra:
             t.meta["spec"] = extra
+        if self.staging is not None:
+            self._build_staging_manifest(t, spec, stage)
         self._kernels[name] = k
         self._task_index[name] = pr
         self._stage_of[name] = stage
@@ -334,25 +393,45 @@ class AppManager:
                 "AppManager")
 
     def _iter_bindings(self, stage: Stage, pr: _PipelineRun, idx: int):
-        """Yield (consumer_key, port, source, task_j) for every declared
-        input of the stage and its task specs."""
+        """Yield (consumer_key, stream, port, source, task_j) for every
+        declared input of the stage and its task specs.  The *stream* id
+        omits the stage index: a pipeline's successive bindings of one
+        port form one broadcast cursor."""
         for port, src in flow.normalize_sources(stage.inputs).items():
-            yield f"{pr.name}:{idx:04d}:{port}", port, src, None
+            yield (f"{pr.name}:{idx:04d}:{port}",
+                   f"{pr.name}:{port}", port, src, None)
         for j, spec in enumerate(stage.tasks):
             for port, src in flow.normalize_sources(spec.inputs).items():
-                yield f"{pr.name}:{idx:04d}:{j:05d}:{port}", port, src, j
+                yield (f"{pr.name}:{idx:04d}:{j:05d}:{port}",
+                       f"{pr.name}:{j:05d}:{port}", port, src, j)
+
+    def _stage_output_channels(self, stage: Stage) -> List[Channel]:
+        outs = list(flow.normalize_outputs(stage.outputs))
+        for spec in stage.tasks:
+            outs.extend(flow.normalize_outputs(spec.outputs))
+        return outs
 
     def _input_blocker(self, stage: Stage, pr: _PipelineRun, idx: int):
-        """First unsatisfiable input, as ``(parking_key, description)``;
-        None when every port can bind right now."""
+        """First unsatisfiable input — or full output channel
+        (back-pressure) — as ``(parking_key, description)``; None when the
+        stage can submit right now."""
         fresh: Dict[str, int] = {}
-        for ck, port, src, _j in self._iter_bindings(stage, pr, idx):
+        own_takes: Dict[str, int] = {}    # this stage's own consumption
+        for ck, stream, port, src, _j in self._iter_bindings(stage, pr,
+                                                             idx):
             if isinstance(src, Channel):
                 self._register_channel(src)
+                src.touch(stream)
+                own_takes[src.name] = own_takes.get(src.name, 0) + 1
                 pk = self._replayed_takes.get((src.name, ck))
                 if pk is not None:
                     i = src._index.get(pk)
-                    if i is None or i in src._taken:
+                    if i is None or (src.mode != "broadcast"
+                                     and i in src._taken):
+                        return (("channel", src.name),
+                                f"channel:{src.name}")
+                elif src.mode == "broadcast":
+                    if src.n_available(ck, stream) < 1:
                         return (("channel", src.name),
                                 f"channel:{src.name}")
                 else:
@@ -367,15 +446,40 @@ class AppManager:
         for cname, n in fresh.items():
             if self.channels[cname].n_available("") < n:
                 return (("channel", cname), f"channel:{cname}")
-        for ch in flow.normalize_outputs(stage.outputs):
+        # back-pressure: park the producer when admitting this stage would
+        # leave the channel above `capacity` unconsumed puts, counting the
+        # puts the stage itself will emit (a stage of N task-level outputs
+        # bursts N puts between blocker checks).  Two carve-outs keep
+        # progress: the stage's OWN takes from that channel are credited
+        # (a feedback stage consuming and producing one bounded channel
+        # must not deadlock on itself), and a fully drained channel always
+        # admits one stage even when its burst alone exceeds capacity.
+        emits: Dict[str, int] = {}
+        for ch in self._stage_output_channels(stage):
             self._register_channel(ch)
+            emits[ch.name] = emits.get(ch.name, 0) + 1
+        for name, n_emit in emits.items():
+            ch = self.channels[name]
+            if ch.capacity is None:
+                continue
+            backlog = ch.n_unconsumed() - own_takes.get(name, 0)
+            if backlog > 0 and backlog + n_emit > ch.capacity:
+                return (("channel_space", name), f"channel_space:{name}")
         return None
 
-    def _take(self, ch: Channel, ck: str) -> Any:
+    def _take(self, ch: Channel, ck: str, stream: Optional[str] = None,
+              n_consumers: int = 1) -> Any:
         pk = self._replayed_takes.get((ch.name, ck))
-        producer, value = ch.take(ck, pk)
-        self.runtime.journal.record_flow("channel_take", ch.name, producer,
-                                         consumer=ck)
+        producer, value = ch.take(ck, pk, stream)
+        is_ref = isinstance(value, StagedRef)
+        self.runtime.journal.record_flow(
+            "channel_take", ch.name, producer, consumer=ck,
+            digest=value.digest if is_ref else None)
+        if self.staging is not None and is_ref:
+            self.staging.on_take(value, n_consumers=n_consumers,
+                                 broadcast=ch.mode == "broadcast")
+        # a take frees channel space: wake producers parked on capacity
+        self._wake(("channel_space", ch.name))
         return value
 
     def _bind_stage_inputs(self, stage: Stage, pr: _PipelineRun, idx: int):
@@ -385,7 +489,9 @@ class AppManager:
         for port, src in flow.normalize_sources(stage.inputs).items():
             if isinstance(src, Channel):
                 ck = f"{pr.name}:{idx:04d}:{port}"
-                stage.bound_inputs[port] = self._take(src, ck)
+                stage.bound_inputs[port] = self._take(
+                    src, ck, f"{pr.name}:{port}",
+                    n_consumers=len(stage.tasks))
             else:
                 stage._future_ports.append((port, src))
                 stage._port_deps.extend(src.stage.task_names)
@@ -397,50 +503,172 @@ class AppManager:
             if isinstance(src, Channel):
                 ck = f"{pr.name}:{idx:04d}:{j:05d}:{port}"
                 self._task_bound.setdefault(name, {})[port] = \
-                    self._take(src, ck)
+                    self._take(src, ck, f"{pr.name}:{j:05d}:{port}")
             else:
                 self._task_futures.setdefault(name, []).append((port, src))
                 port_deps.extend(src.stage.task_names)
         return port_deps
 
+    # ------------------------------------------------------------ staging
+    def _build_staging_manifest(self, t: Task, spec: TaskSpec,
+                                stage: Stage):
+        """Collect the task's staged refs (bound channel payloads +
+        stage_in declarations) into ``task.meta["staged_refs"]`` — the
+        executor's stage-in pass transfers them to the task's granted pod
+        between ``pop_ready`` and kernel launch."""
+        for port, v in stage.bound_inputs.items():
+            if isinstance(v, StagedRef):
+                self.staging.manifest_input(t, port, v)
+        for port, v in self._task_bound.get(t.name, {}).items():
+            if isinstance(v, StagedRef):
+                self.staging.manifest_input(t, port, v)
+        for item in [*stage.stage_in, *(spec.stage_in or ())]:
+            self.staging.acquire_stage_in(t, item)
+
+    def _producer_hints(self, task_names):
+        """(locations, declared nbytes) of a completed producer stage —
+        where its members ran (each member's piece is replicated there)
+        and, for DES mode, how big the combined payload is declared."""
+        if self.staging is None:
+            return [], 0
+        locs: List[str] = []
+        nbytes = 0
+        for nm in task_names or ():
+            task = self.session.graph.tasks.get(nm) if self.session else \
+                None
+            if task is not None:
+                loc = self.staging.location_for(task)
+                if loc not in locs:
+                    locs.append(loc)
+            k = self._kernels.get(nm)
+            if k is not None and k.output_nbytes:
+                nbytes += int(k.output_nbytes)
+        return locs, nbytes
+
+    def _run_stage_out(self, outs, payload):
+        """Invoke stage_out callables (the legacy download_output_data
+        path under staging management), charged to t_data.  Real mode
+        only — DES tasks execute nothing, so there is no result to stage
+        out (and a callable would crash on the None placeholder)."""
+        if self.runtime.mode != "real":
+            return
+        callables = [d for d in (outs or ()) if callable(d)]
+        if not callables:
+            return
+        t0 = time.perf_counter()
+        for d in callables:
+            d(payload)
+        self.profile.t_data += time.perf_counter() - t0
+
     def _put(self, ch: Channel, pk: str, fresh_value, *,
-             task_level: bool = False):
+             task_level: bool = False, nbytes_hint: int = 0,
+             locations=()):
         """The one put-with-replay protocol: journaled values override the
-        freshly computed one, the put is recorded, waiters wake."""
+        freshly computed one, the put is recorded, waiters wake.  With a
+        staging layer, large fresh payloads are staged and the REF is what
+        travels (journaled with its digest, so restarts replay refs
+        without re-staging); in DES mode a declared ``nbytes_hint`` stages
+        a virtual ref so t_data is modeled without payloads."""
         self._register_channel(ch)
         if ch.has_put(pk):
             return
         value = self._replayed_puts.get((ch.name, pk), _MISSING)
-        if value is _MISSING:
+        replayed = value is not _MISSING
+        if not replayed:
             value = fresh_value
+        elif self.staging is not None:
+            value = decode_refs(value)
+        check = self.runtime.mode == "real"
+        if self.staging is not None and not replayed:
+            if check and not isinstance(value, StagedRef):
+                ch.check(value, task_level=task_level)   # pre-staging
+                check = False
+                value = self.staging.stage_payload(value, list(locations))
+            elif self.runtime.mode == "sim" and nbytes_hint:
+                ref = self.staging.stage_virtual(
+                    f"{ch.name}:{pk}", nbytes_hint, list(locations))
+                if ref is not None:
+                    value = ref
+        is_ref = isinstance(value, StagedRef)
         ch.put(pk, value, task_level=task_level,
-               check=self.runtime.mode == "real")
-        self.runtime.journal.record_flow("channel_put", ch.name, pk,
-                                         value=value)
+               check=check and not is_ref)
+        # a journaled ref is only replayable when its payload outlives the
+        # process: a write-through spill file (real mode) or virtual-ref
+        # metadata (sim).  Otherwise journal the payload itself, so a
+        # restart replays by value (and re-stages fresh)
+        ref_durable = is_ref and (
+            self.runtime.mode == "sim"
+            or self.staging.store.spill_dir is not None)
+        if is_ref and not ref_durable:
+            journal_value = fresh_value
+        elif self.staging is not None:
+            journal_value = encode_refs(value)
+        else:
+            journal_value = value
+        self.runtime.journal.record_flow(
+            "channel_put", ch.name, pk, value=journal_value,
+            digest=value.digest if is_ref else None,
+            nbytes=value.nbytes if is_ref else None)
         self._wake(("channel", ch.name))
 
     def _emit_outputs(self, stage: Stage, pr: _PipelineRun, idx: int):
         """Stage completed: put its {task: result} dict on every declared
         output channel."""
-        for ch in flow.normalize_outputs(stage.outputs):
-            self._put(ch, f"{pr.name}:{idx:04d}", dict(stage.results))
+        outs = flow.normalize_outputs(stage.outputs)
+        if self.staging is not None and stage.stage_out and any(
+                self.session.graph.tasks[nm].attempts
+                for nm in stage.task_names or ()):
+            # skipped when the whole stage replayed from the journal:
+            # its downloads ran before the restart
+            self._run_stage_out(stage.stage_out, dict(stage.results))
+        if not outs:
+            return
+        locations, nbytes = self._producer_hints(stage.task_names)
+        for ch in outs:
+            self._put(ch, f"{pr.name}:{idx:04d}", dict(stage.results),
+                      nbytes_hint=nbytes, locations=locations)
 
     def _emit_task_outputs(self, task: Task, spec: TaskSpec):
-        for ch in flow.normalize_outputs(spec.outputs):
-            self._put(ch, task.name, task.result, task_level=True)
+        outs = flow.normalize_outputs(spec.outputs)
+        if not outs:
+            return
+        locations, nbytes = self._producer_hints([task.name])
+        for ch in outs:
+            self._put(ch, task.name, task.result, task_level=True,
+                      nbytes_hint=nbytes, locations=locations)
 
     def _wake(self, key):
         """Re-attempt submission of pipelines parked on ``key`` (they
         re-park on their next unsatisfied input, if any).  Only "waiting"
         pipelines wake: a pipeline marked "blocked" belongs to a drained
         session whose task graph is gone — resubmitting its stages into a
-        later run's fresh session would reference dead dependency names."""
-        for pr in self._parked.pop(key, []):
-            if pr.state == "waiting":
-                self._submit_next_stage(pr, dynamic=True)
+        later run's fresh session would reference dead dependency names.
+
+        Wakes raised while another pipeline is mid-submission queue up and
+        drain when the outermost submission returns (see ``_advance_depth``
+        above)."""
+        self._pending_wakes.append(key)
+        if self._advance_depth == 0:
+            self._drain_wakes()
+
+    def _drain_wakes(self):
+        while self._pending_wakes:
+            key = self._pending_wakes.pop(0)
+            for pr in self._parked.pop(key, []):
+                if pr.state == "waiting":
+                    self._submit_next_stage(pr, dynamic=True)
 
     # ------------------------------------------------------------ advance
     def _submit_next_stage(self, pr: _PipelineRun, *, dynamic: bool):
+        self._advance_depth += 1
+        try:
+            self._submit_next_stage_inner(pr, dynamic=dynamic)
+        finally:
+            self._advance_depth -= 1
+        if self._advance_depth == 0:
+            self._drain_wakes()
+
+    def _submit_next_stage_inner(self, pr: _PipelineRun, *, dynamic: bool):
         """Submit pr's next stage; parks the pipeline when its inputs are
         not yet satisfiable; skips through empty (control-only) stages,
         firing their on_done inline."""
@@ -450,6 +678,15 @@ class AppManager:
                 pr.state = "done"
                 return
             stage = pr.spec.stages[nxt]
+            if self.staging is None and (stage.stage_in or stage.stage_out):
+                # stage-level declarations have no kernel-side fallback
+                # (unlike TaskSpec's, which default FROM the kernel's own
+                # upload/download lists) — ignoring them silently would
+                # drop declared inputs
+                raise ValueError(
+                    f"stage {stage.name!r} declares stage_in/stage_out "
+                    "but the pilot has no staging layer "
+                    "(PilotRuntime(staging=StagingLayer(...)))")
             blocker = self._input_blocker(stage, pr, nxt)
             if blocker is not None:
                 key, desc = blocker
@@ -498,11 +735,22 @@ class AppManager:
         st = prof.per_stage.setdefault(task.stage, {"n": 0, "t_exec": 0.0})
         st["n"] += 1
         st["t_exec"] += (task.duration if self.runtime.mode == "sim"
-                         else max(task.t_finished - task.t_started, 0.0))
+                         else max(task.t_finished - task.t_started
+                                  - task.meta.get("t_data_kernel", 0.0),
+                                  0.0))
+        if task.t_data:
+            st["t_data"] = st.get("t_data", 0.0) + task.t_data
         if task.state == TaskState.DONE:
             stage.results[task.name] = task.result
             prof.results.setdefault("tasks", {})[task.name] = task.result
-            self._emit_task_outputs(task, self._spec_of[task.name])
+            spec = self._spec_of[task.name]
+            if self.staging is not None and task.attempts:
+                # the kernel skipped its own download phase (staging
+                # manages data movement): run the declarations here —
+                # but NOT for journal-replayed tasks (attempts == 0),
+                # whose downloads ran before the restart
+                self._run_stage_out(spec.stage_out, task.result)
+            self._emit_task_outputs(task, spec)
         else:
             stage.n_failed += 1
         pr.pending.discard(task.name)
@@ -569,6 +817,7 @@ class AppManager:
 
         prof.ttc += rp.ttc
         prof.t_exec += rp.t_exec
+        prof.t_data += rp.t_data          # staged-ref transfer seconds
         prof.t_rts_overhead += rp.t_rts_overhead
         prof.n_tasks += rp.n_tasks
         prof.n_failed += rp.n_failed
@@ -587,4 +836,6 @@ class AppManager:
                       **({"waiting_on": pr.waiting_on}
                          if pr.state == "blocked" else {})}
             for pr in self.pipeline_runs.values()}
+        if self.staging is not None:
+            prof.results["staging"] = self.staging.summary()
         return prof

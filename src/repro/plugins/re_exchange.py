@@ -11,6 +11,14 @@ submeshes and the PST AppManager passes ``ctx["submesh"]`` — the jax Mesh
 from ``PilotRuntime.submesh_for(task)``.  With ``args["device"]`` set, the
 swap is computed on that submesh's devices (the on-device
 ``metropolis_swap_device`` path) instead of host numpy.
+
+Staging: under a ``repro.staging`` pilot the member traffic arrives staged
+instead of passed by value — bulk member fields (trajectories, states) are
+``StagedRef`` handles nested in the result dicts.  The exchange reads only
+the scalar ``member``/``loss`` fields, leaves every nested ref untouched,
+and reports the traffic it avoided as ``staged_avoided_bytes`` (the t_data
+the swap decision did NOT cost; a ref-valued ``loss`` is dereferenced via
+``ctx["staging"]`` and charged to this task's t_data).
 """
 from __future__ import annotations
 
@@ -21,6 +29,8 @@ import numpy as np
 
 from repro.core.kernel_plugin import register_kernel
 from repro.plugins.lm import STATE_STORE
+from repro.staging.ports import iter_refs
+from repro.staging.store import StagedRef
 
 
 def metropolis_swaps(losses, temps, cycle: int, seed: int = 0):
@@ -90,9 +100,21 @@ def re_exchange(args, ctx):
         if isinstance(payload, dict):
             sources.extend(payload.values())
     sources.extend((ctx.get("dep_results") or {}).values())
+    avoided_bytes = 0
+    staging = ctx.get("staging")
     for res in sources:
         if isinstance(res, dict) and "member" in res and "loss" in res:
-            losses[int(res["member"])] = float(res["loss"])
+            loss = res["loss"]
+            if isinstance(loss, StagedRef):     # unusual: staged scalar
+                loss = staging.get(loss) if staging is not None else \
+                    float("nan")
+            losses[int(res["member"])] = float(loss)
+            # bulk fields (trajectories, member state) stay LAZY: the
+            # exchange decision never dereferences them, so their bytes
+            # never hit this task's t_data
+            avoided_bytes += sum(r.nbytes
+                                 for key, v in res.items() if key != "loss"
+                                 for r in iter_refs(v))
     explicit = args.get("losses")
     for i in range(n):
         if losses[i] is None and explicit is not None \
@@ -107,5 +129,8 @@ def re_exchange(args, ctx):
     else:
         new_temps, accepted = metropolis_swaps(losses, temps, cycle,
                                                int(args.get("seed", 0)))
-    return {"temps": [float(t) for t in new_temps],
-            "accepted": accepted, "losses": losses, "cycle": cycle}
+    out = {"temps": [float(t) for t in new_temps],
+           "accepted": accepted, "losses": losses, "cycle": cycle}
+    if avoided_bytes:
+        out["staged_avoided_bytes"] = int(avoided_bytes)
+    return out

@@ -31,6 +31,15 @@ is granted that many slot ids (``task.meta["slot_ids"]``) and can build its
 JAX mesh via ``runtime.submesh_for(task)``.  This ties the paper's pilot-slot
 abstraction to device placement: e.g. one replica-exchange member per pod of
 the 2x16x16 production mesh.
+
+Data staging: with a ``staging`` layer (repro.staging.StagingLayer) tasks
+carrying staged refs (``task.meta["staged_refs"]``) have their transfers
+planned and executed between ``pop_ready`` and kernel launch, charged to
+the task's ``t_data``; slot ids are granted locality-aware (free slots in
+pods that already hold the task's input replicas first) and the scheduling
+pass orders the frontier so input-local tasks run before tasks that would
+have to copy.  Slot-id accounting turns on even without a device topology
+(abstract ids) so locality works on plain pilots.
 """
 from __future__ import annotations
 
@@ -71,6 +80,7 @@ class PilotRuntime:
     def __init__(self, slots: Optional[int] = None, *, mode: str = "real",
                  topology=None,
                  journal: Optional[Journal] = None,
+                 staging=None,
                  max_retries: int = 2,
                  straggler_factor: float = 0.0,
                  min_straggler_samples: int = 5,
@@ -85,9 +95,20 @@ class PilotRuntime:
         self.topology = topology
         if topology is not None and slots > topology.n_slots:
             raise ValueError(f"{slots} slots > {topology.n_slots} submeshes")
-        # free slot ids (only tracked when the slots are device submeshes)
-        self._free_ids: Optional[List[int]] = \
-            None if topology is None else list(range(topology.n_slots))[::-1]
+        # free slot ids: tracked when the slots are device submeshes, and
+        # also (abstract ids) when a staging layer needs slot locality
+        self._free_ids: Optional[List[int]] = (
+            list(range(topology.n_slots))[::-1] if topology is not None
+            else list(range(slots))[::-1] if staging is not None
+            else None)
+        # abstract ids ever minted and not retired (free + held): resize
+        # must never re-mint an id a running task still holds
+        self._minted: Optional[set] = \
+            set(self._free_ids) if (topology is None
+                                    and staging is not None) else None
+        self.staging = staging
+        if staging is not None:
+            staging.bind_runtime(self)
         self.journal = journal or Journal(None)
         self.max_retries = max_retries
         self.straggler_factor = straggler_factor
@@ -128,21 +149,68 @@ class PilotRuntime:
                 self.topology = self.topology.recarve(self._resize_to)
                 self._free_ids = list(range(self.topology.n_slots))[::-1]
             delta = self._resize_to - self.slots
+            if self.topology is None and self._free_ids is not None:
+                # abstract (staging-only) ids track capacity directly:
+                # grow mints the lowest ids not currently outstanding
+                # (NEVER an id a running task holds — that would alias two
+                # tasks onto one locality domain), shrink retires free
+                # ones (held ids return to a pool the capacity gate no
+                # longer admits)
+                if delta > 0:
+                    new, i = [], 0
+                    while len(new) < delta:
+                        if i not in self._minted:
+                            new.append(i)
+                        i += 1
+                    self._minted.update(new)
+                    self._free_ids[:0] = new[::-1]
+                elif delta < 0:
+                    drop = set(sorted(self._free_ids,
+                                      reverse=True)[:-delta])
+                    self._free_ids = [i for i in self._free_ids
+                                     if i not in drop]
+                    self._minted -= drop
+            delta_out = delta
             self.slots = self._resize_to
             self._resize_to = None
-            return delta
+            return delta_out
 
     # ------------------------------------------------------------ submeshes
     def _acquire_slots(self, t: Task):
-        """Grant ``t.slots`` slot ids (no-op without a topology).
+        """Grant ``t.slots`` slot ids (no-op without id tracking).
 
         Called wherever busy-count is incremented; capacity gating
         (busy <= self.slots <= topology.n_slots) guarantees availability.
+        With a staging layer the grant is locality-aware: free ids in pods
+        that already hold the task's staged input replicas come first, so
+        the stage-in pass resolves to *link* instead of *copy*.
         """
         if self._free_ids is None:
             return
-        t.meta["slot_ids"] = [self._free_ids.pop() for _ in range(t.slots)]
+        if self.staging is not None and t.meta.get("staged_refs"):
+            order = self.staging.preferred_ids(t, self._free_ids)
+            ids = order[:t.slots]
+            for i in ids:
+                self._free_ids.remove(i)
+            t.meta["slot_ids"] = ids
+        else:
+            t.meta["slot_ids"] = [self._free_ids.pop()
+                                  for _ in range(t.slots)]
         t.meta.pop("slots_released", None)
+
+    # ------------------------------------------------------------ staging
+    def _stage_in_task(self, t: Task) -> float:
+        """Execute the task's planned input transfers (repro.staging) —
+        runs between ``pop_ready`` and kernel launch.  Returns the
+        seconds charged to t_data (0.0 without a staging layer)."""
+        if self.staging is None or not t.meta.get("staged_refs"):
+            return 0.0
+        return self.staging.stage_in(t, self.mode)
+
+    def _staging_finish(self, t: Task):
+        """Terminal-state hook: release the task's staged-blob holds."""
+        if self.staging is not None:
+            self.staging.finish(t)
 
     def _release_slots(self, t: Task):
         """Return t's slot ids exactly once (supersession may race a pop)."""
@@ -278,6 +346,29 @@ class RuntimeSession:
                                    if t.state == TaskState.CANCELED)
         return self.prof
 
+    # ------------------------------------------------------------ staging
+    def _locality_candidates(self, avail: int) -> List[Task]:
+        """Bounded locality-ordered lookahead (staging pilots only): pop
+        at most ``avail`` + headroom ready tasks — nothing at all when
+        nothing can fit — and order input-local tasks first.  Shared by
+        the sim and real drain loops; the caller launches what fits and
+        hands the rest back."""
+        graph, rt = self.graph, self.rt
+        cands: List[Task] = []
+        if avail <= 0:
+            return cands
+        min_w = graph.frontier_min_width()
+        if min_w is None or min_w > avail:
+            return cands
+        while len(cands) < avail + 16:
+            t = graph.pop_ready()
+            if t is None:
+                break
+            cands.append(t)
+        cands.sort(key=lambda c: (not rt.staging.prefers(
+            c, rt._free_ids), c.tid))
+        return cands
+
     # ------------------------------------------------------------ callbacks
     def _queue_callback(self, t: Task):
         if self.on_task_done is not None and t.speculative_of is None:
@@ -294,8 +385,40 @@ class RuntimeSession:
         self.prof.t_rts_overhead += time.perf_counter() - t0
         return out
 
+    def _launch_sim(self, t: Task):
+        self._busy += t.slots
+        rt = self.rt
+        rt._acquire_slots(t)
+        # staged-input transfers execute here — between pop_ready and
+        # launch — and extend the task's occupancy on the virtual clock
+        t_data = rt._stage_in_task(t)
+        t.attempts += 1
+        t.state = TaskState.RUNNING
+        t.t_scheduled = time.perf_counter()
+        t.v_started = self.vnow
+        rt.journal.record(t, "scheduled")
+        heapq.heappush(self._heap,
+                       (self.vnow + max(t.duration, 0.0) + t_data,
+                        self._seq, t))
+        self._seq += 1
+
     def _schedule_sim(self):
         rt, graph = self.rt, self.graph
+        if rt.staging is not None:
+            # locality-ordered pass: tasks whose staged inputs already
+            # have a replica in a free pod run first (they link instead
+            # of copy); head-of-line holds within the locality order
+            # (stop at the first candidate that does not fit, same as
+            # the seed)
+            cands = self._locality_candidates(rt.slots - self._busy)
+            for i, t in enumerate(cands):
+                if rt.slots - self._busy >= t.slots:
+                    self._launch_sim(t)
+                else:
+                    for c in cands[i:]:
+                        graph.requeue(c)
+                    break
+            return
         while True:
             t = graph.pop_ready()          # incremental frontier, tid order
             if t is None:
@@ -303,16 +426,7 @@ class RuntimeSession:
             if rt.slots - self._busy < t.slots:
                 graph.requeue(t)           # same head-of-line rule as seed
                 break
-            self._busy += t.slots
-            rt._acquire_slots(t)
-            t.attempts += 1
-            t.state = TaskState.RUNNING
-            t.t_scheduled = time.perf_counter()
-            t.v_started = self.vnow
-            rt.journal.record(t, "scheduled")
-            heapq.heappush(self._heap,
-                           (self.vnow + max(t.duration, 0.0), self._seq, t))
-            self._seq += 1
+            self._launch_sim(t)
 
     def _finish_sim(self, t: Task):
         rt, graph, prof = self.rt, self.graph, self.prof
@@ -320,9 +434,11 @@ class RuntimeSession:
         t.v_finished = self.vnow
         t.t_finished = time.perf_counter()
         prof.t_exec += t.duration
+        prof.t_data += t.t_data
         prof.slot_busy += t.duration * t.slots
         self._durations.setdefault(t.stage, []).append(t.duration)
         rt.journal.record(t, "finished")
+        rt._staging_finish(t)
         if t.speculative_of:
             # the duplicate won: complete the straggling original
             # and kill it (freeing its slot now)
@@ -334,6 +450,7 @@ class RuntimeSession:
                 self._busy -= orig.slots
                 rt._release_slots(orig)
                 rt.journal.record(orig, "finished", by="speculative")
+                rt._staging_finish(orig)
                 self._queue_callback(orig)
             self._spec_launched.pop(t.speculative_of, None)
         else:
@@ -368,6 +485,7 @@ class RuntimeSession:
                                 for d in t.deps)):
                         t.state = TaskState.CANCELED
                         rt.journal.record(t, "canceled")
+                        rt._staging_finish(t)
                         self._queue_callback(t)
                         canceled = True
                 if not canceled:
@@ -377,6 +495,7 @@ class RuntimeSession:
                         if t.state == TaskState.NEW:
                             t.state = TaskState.CANCELED
                             rt.journal.record(t, "canceled")
+                            rt._staging_finish(t)
                             self._queue_callback(t)
                 self._flush_callbacks()
                 if graph.done():
@@ -435,7 +554,13 @@ class RuntimeSession:
         rt, prof, cv = self.rt, self.prof, self._cv
         t.t_started = time.perf_counter()
         outcome = TaskState.DONE
+        t.meta.pop("t_data_kernel", None)     # fresh window per attempt
         try:
+            # staged-input transfers: between pop_ready and kernel launch,
+            # on the worker (transfers overlap across tasks); the restamp
+            # keeps t_exec and t_data disjoint in the TTC decomposition
+            rt._stage_in_task(t)
+            t.t_started = time.perf_counter()
             if t.run is not None:
                 t.result = t.run(t)
             elif t.duration:
@@ -453,14 +578,22 @@ class RuntimeSession:
             # releases the old ones
             self._free["n"] += t.slots
             rt._release_slots(t)
-            prof.t_exec += t.t_finished - t.t_started
-            prof.slot_busy += (t.t_finished - t.t_started) * t.slots
+            # in-kernel lazy derefs (ctx["staging"].get) charged to t_data
+            # come OUT of the exec window — the decomposition terms must
+            # not overlap
+            span = max(t.t_finished - t.t_started
+                       - t.meta.get("t_data_kernel", 0.0), 0.0)
+            prof.t_exec += span
+            prof.slot_busy += span * t.slots
             t.state = outcome
             if outcome == TaskState.NEW:
                 prof.n_retries += 1
             rt.journal.record(
                 t, "finished" if t.state == TaskState.DONE else "failed")
             if t.state.terminal:
+                # cumulative across attempts, charged once at the end
+                prof.t_data += t.t_data
+                rt._staging_finish(t)
                 self._queue_callback(t)
             self._inflight -= 1
             cv.notify_all()
@@ -494,11 +627,21 @@ class RuntimeSession:
                 # without it a nearly-full pilot would drain the whole
                 # frontier into `skipped` on every wakeup (O(n) per event)
                 scheduled, skipped = [], []
+                cands = None
+                if rt.staging is not None:
+                    # locality-ordered pass: input-local tasks claim free
+                    # pods before tasks that would have to copy (too-wide
+                    # candidates are skipped, as in the default pass)
+                    cands = self._locality_candidates(self._free["n"])
+                    cands.reverse()        # consumed via pop() below
                 while True:
-                    min_w = graph.frontier_min_width()
-                    if min_w is None or min_w > self._free["n"]:
-                        break
-                    t = graph.pop_ready()
+                    if cands is not None:
+                        t = cands.pop() if cands else None
+                    else:
+                        min_w = graph.frontier_min_width()
+                        if min_w is None or min_w > self._free["n"]:
+                            break
+                        t = graph.pop_ready()
                     if t is None:
                         break
                     if t.slots > self._free["n"]:
@@ -538,6 +681,7 @@ class RuntimeSession:
                                 for d in t.deps):
                             t.state = TaskState.CANCELED
                             rt.journal.record(t, "canceled")
+                            rt._staging_finish(t)
                             self._queue_callback(t)
                     if graph.done() and not self._cbq:
                         break

@@ -48,17 +48,28 @@ class Journal:
         self._fh.write(json.dumps(rec, default=str) + "\n")
 
     def record_flow(self, event: str, channel: str, producer: str,
-                    value=None, consumer: Optional[str] = None):
+                    value=None, consumer: Optional[str] = None,
+                    digest: Optional[str] = None,
+                    nbytes: Optional[int] = None):
         """Persist a data-flow event (core.flow): ``channel_put`` carries
         the put value (when JSON-serializable), ``channel_take`` the
         consumer->producer binding.  Replay uses these so coupled pipelines
-        see identical inputs after a restart."""
+        see identical inputs after a restart.
+
+        Staged puts (repro.staging) journal their ref *encoded* as the
+        value AND carry ``digest``/``nbytes`` explicitly, so a coupled
+        restart re-binds consumers to the content-addressed blob (spill
+        file) without re-staging the payload."""
         if self._fh is None:
             return
         rec = {"t": time.time(), "event": event, "channel": channel,
                "producer": producer}
         if consumer is not None:
             rec["consumer"] = consumer
+        if digest is not None:
+            rec["digest"] = digest
+            if nbytes is not None:
+                rec["nbytes"] = int(nbytes)
         if event == "channel_put":
             try:
                 # only values that survive the JSON round-trip UNCHANGED

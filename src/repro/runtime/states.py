@@ -56,6 +56,10 @@ class Task:
     tid: str = field(default_factory=lambda: f"t{next(_tid_counter):06d}")
     state: TaskState = TaskState.NEW
     attempts: int = 0
+    # seconds spent moving this task's data (staged-ref transfers executed
+    # between pop_ready and launch, plus in-kernel lazy derefs) — the
+    # per-task slice of the paper's t_data term
+    t_data: float = 0.0
     result: Any = None
     error: Optional[str] = None
     # timestamps (real clock for overheads; virtual clock for sim TTC)

@@ -206,6 +206,186 @@ def test_two_consumers_fifo_work_queue():
         assert prof.results["pipelines"][w]["state"] == "done"
 
 
+def test_channel_backpressure_parks_producer():
+    """Channel(capacity=1): the producer pipeline parks once one put sits
+    unconsumed, and wakes on the consumer's take — instead of buffering
+    every cycle's payload unboundedly."""
+    ch = Channel("bp", capacity=1)
+    prod = _producer(ch, cycles=4, members=1, dur=1.0)
+    cons = PipelineSpec(
+        [Stage([TaskSpec(_k(5.0), name=f"slow.r{c}")],
+               name=f"r{c}", inputs={"q": ch}) for c in range(4)],
+        name="slow")
+    am = AppManager(PilotRuntime(slots=4, mode="sim"))
+    prof = am.run([prod, cons])
+    assert prof.n_failed == 0
+    pipes = prof.results["pipelines"]
+    assert pipes["producer"]["state"] == "done"
+    assert pipes["slow"]["state"] == "done"
+    g = am.session.graph
+    # unthrottled, the producer would drain by v=4; with capacity=1 each
+    # cycle past the first two waits for the slow consumer's take:
+    # c0@1, c1@2 (round0 took put0 at v=1), c2 parked until round1 takes
+    # at v=6, c3 until round2 takes at v=11
+    assert g.tasks["prod.c2.m0"].v_started == 6.0
+    assert g.tasks["prod.c3.m0"].v_started == 11.0
+    assert ch.n_unconsumed() == 0
+
+
+def test_channel_backpressure_unfed_producer_reports_blocked():
+    """A producer parked on a full channel nobody drains is reported
+    blocked with the channel_space marker."""
+    ch = Channel("full", capacity=1)
+    prod = _producer(ch, cycles=3, members=1, dur=1.0)
+    prof = AppManager(PilotRuntime(slots=2, mode="sim")).run([prod])
+    pipes = prof.results["pipelines"]
+    assert pipes["producer"]["state"] == "blocked"
+    assert pipes["producer"]["waiting_on"] == "channel_space:full"
+    assert len(ch.puts) == 1                     # exactly capacity
+
+
+def test_reentrant_wake_cannot_steal_counted_puts():
+    """A wake delivered between two of a consumer's counted takes must
+    not reentrantly submit another consumer that steals the puts the
+    first consumer's blocker check already counted (this crashed with an
+    uncaught LookupError before wakes were deferred to the end of the
+    outermost submission)."""
+    X = Channel("X", capacity=2)
+    Z = Channel("Z")
+    Z2 = Channel("Z2")
+    P = PipelineSpec(
+        [Stage([TaskSpec(_k(1.0), name=f"px{i}", outputs=[X])
+                for i in range(2)], name="s0"),
+         Stage([], name="ctl", outputs=[X, Z])], name="P")
+    S = PipelineSpec([Stage([TaskSpec(_k(2.0), name="s2")], name="g",
+                            outputs=[Z2])], name="S")
+    A = PipelineSpec(
+        [Stage([TaskSpec(_k(1.0), name=f"ax{i}", inputs={"x": X})
+                for i in range(2)], name="a", inputs={"z2": Z2})],
+        name="A")
+    C = PipelineSpec(
+        [Stage([TaskSpec(_k(1.0), name=f"cx{i}", inputs={"x": X})
+                for i in range(2)], name="c", inputs={"z": Z})], name="C")
+    prof = AppManager(PilotRuntime(slots=8, mode="sim")).run([P, S, A, C])
+    assert prof.n_failed == 0
+    pipes = prof.results["pipelines"]
+    # A keeps the two puts it counted; C (needing two, with only the
+    # control put left) parks instead of crashing the run
+    assert pipes["A"]["state"] == "done"
+    assert pipes["P"]["state"] == "done"
+    assert pipes["C"]["state"] == "blocked"
+    assert len(X.puts) == 3
+
+
+def test_backpressure_counts_task_level_burst():
+    """A stage whose N tasks each put task-level outputs bursts N puts
+    between blocker checks: the blocker must count the burst (admitting
+    only from a drained channel when the burst exceeds capacity)."""
+    ch = Channel("burst", capacity=2)
+    prod = PipelineSpec(
+        [Stage([TaskSpec(_k(1.0), name=f"b{c}.{i}", outputs=[ch])
+                for i in range(4)], name=f"s{c}") for c in range(2)],
+        name="P")
+    cons = PipelineSpec(
+        [Stage([TaskSpec(_k(2.0), name=f"r{c}")], name=f"r{c}",
+               inputs={"q": ch}) for c in range(8)], name="C")
+    am = AppManager(PilotRuntime(slots=8, mode="sim"))
+    prof = am.run([prod, cons])
+    assert prof.n_failed == 0
+    assert all(p["state"] == "done"
+               for p in prof.results["pipelines"].values())
+    g = am.session.graph
+    # stage 0 admits into the empty channel (progress guarantee) even
+    # though its burst of 4 exceeds capacity 2; stage 1 waits until the
+    # consumer fully drains that burst (4th take at v=7)
+    assert g.tasks["b0.0"].v_started == 0.0
+    assert g.tasks["b1.0"].v_started == 7.0
+
+
+def test_backpressure_feedback_loop_does_not_self_deadlock():
+    """A stage that consumes from AND produces to the same bounded
+    channel credits its own takes: the loop cycles instead of parking
+    on the space its own take is about to free."""
+    ch = Channel("loop", capacity=1)
+    seed = PipelineSpec([Stage([TaskSpec(_k(1.0), name="seed")],
+                               name="s", outputs=[ch])], name="seed")
+    fb = PipelineSpec(
+        [Stage([TaskSpec(_k(1.0), name=f"fb{c}")], name=f"f{c}",
+               inputs={"q": ch}, outputs=[ch]) for c in range(3)],
+        name="fb")
+    prof = AppManager(PilotRuntime(slots=2, mode="sim")).run([seed, fb])
+    assert prof.n_failed == 0
+    assert prof.results["pipelines"]["fb"]["state"] == "done"
+    assert len(ch.puts) == 4                     # seed + 3 feedback puts
+
+
+def test_channel_capacity_validation():
+    with pytest.raises(ValueError, match="capacity"):
+        Channel("bad", capacity=0)
+    with pytest.raises(ValueError, match="mode"):
+        Channel("bad", mode="multicast")
+
+
+def test_broadcast_channel_every_consumer_sees_every_put():
+    """mode='broadcast': each consumer pipeline keeps its own cursor —
+    N analysis ensembles each consume EVERY trajectory (vs FIFO, which
+    splits the stream)."""
+    ch = Channel("bcast", mode="broadcast")
+    prod = PipelineSpec(
+        [Stage([TaskSpec(_echo(c, 1.0), name=f"bp.c{c}")],
+               name=f"cycle{c}", outputs=[ch]) for c in range(3)],
+        name="producer")
+    consumers = [
+        PipelineSpec([Stage([TaskSpec(_echo(w, 0.5), name=f"{w}.r{c}")],
+                            name=f"r{c}", inputs={"q": ch})
+                      for c in range(3)], name=w)
+        for w in ("wA", "wB")]
+    am = AppManager(PilotRuntime(slots=6, mode="real"))
+    prof = am.run([prod] + consumers)
+    assert prof.n_failed == 0
+    assert len(ch.puts) == 3                     # one blob per cycle...
+    for w in ("wA", "wB"):                       # ...each taken by BOTH
+        assert prof.results["pipelines"][w]["state"] == "done"
+        got = [prof.results["tasks"][f"{w}.r{c}"]["inputs"]["q"]
+               for c in range(3)]
+        assert [g[f"bp.c{c}"]["value"] for c, g in enumerate(got)] \
+            == [0, 1, 2]
+    assert ch.n_unconsumed() == 0                # both cursors drained
+
+
+def test_broadcast_channel_replays_from_journal():
+    """Broadcast takes re-bind to their journaled producer on restart."""
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "j.jsonl")
+
+        def run():
+            rt = PilotRuntime(slots=4, mode="real",
+                              journal=Journal(path))
+            ch = Channel("b", mode="broadcast")
+            prod = PipelineSpec(
+                [Stage([TaskSpec(_echo(c), name=f"p.c{c}")],
+                       name=f"c{c}", outputs=[ch]) for c in range(2)],
+                name="P")
+            cons = [PipelineSpec(
+                [Stage([TaskSpec(_echo(w), name=f"{w}.r{c}")],
+                       name=f"r{c}", inputs={"q": ch})
+                 for c in range(2)], name=w) for w in ("x", "y")]
+            prof = AppManager(rt).run([prod] + cons)
+            rt.journal.close()
+            return prof, ch
+
+        prof1, ch1 = run()
+        assert prof1.n_failed == 0
+        n_lines = len(open(path).read().splitlines())
+        prof2, ch2 = run()
+        assert prof2.n_failed == 0
+        assert ch2.puts == ch1.puts
+        assert ch2._cursors == ch1._cursors
+        recs = [json.loads(ln) for ln in open(path)]
+        assert not [r for r in recs[n_lines:]
+                    if r.get("event") == "scheduled"]   # no re-execution
+
+
 def test_channel_name_collision_rejected():
     a, b = Channel("same"), Channel("same")
     prod = PipelineSpec([Stage([TaskSpec(_k(1.0))], name="s",
