@@ -1,15 +1,39 @@
-"""Fault-tolerance showcase: injected task failures with bounded retries,
-straggler speculation, elastic pilot resize, and journal-based restart —
-all at the ensemble layer where the paper's contribution lives.
+"""Fault-tolerance showcase + chaos bench: injected task failures with
+bounded retries, straggler speculation, elastic pilot resize, journal-based
+restart — and pod death as a NORMAL event during a 1000-member coupled
+ensemble, with retries re-placed off the dead pod and TTC degrading
+gracefully instead of the run aborting.
 
-    PYTHONPATH=src python examples/elastic_faults.py
+    PYTHONPATH=src python examples/elastic_faults.py [--fast]
+
+Emits BENCH_faults.json (repo root): fault-free baseline vs chaos run
+(a pod killed every KILL_EVERY virtual seconds, replacement pods joining
+RESPAWN_AFTER seconds later) over the same coupled producer/analysis
+workload.  Fails loudly unless the chaos run finishes every task
+(n_failed == 0), in-flight attempts were actually lost and retried off
+their dead pods, and TTC stays under 2x the fault-free baseline.
 """
+import argparse
+import json
+import os
 import tempfile
 
-from repro.core import BagOfTasks, Kernel, SingleClusterEnvironment
+from repro.core import AppManager, BagOfTasks, Channel, Kernel, \
+    PipelineSpec, SingleClusterEnvironment, Stage, TaskSpec
 from repro.runtime.executor import PilotRuntime
+from repro.runtime.faults import FaultInjector
 from repro.runtime.journal import Journal
 from repro.runtime.states import Task, TaskGraph
+from repro.staging import LocalityMap, StagingLayer
+
+SLOTS = 16
+PODS = 4
+MEMBER_NBYTES = 64 << 20
+FULL = dict(pipelines=4, cycles=25, members=10)   # 1000 members + 100 ana
+FAST = dict(pipelines=2, cycles=5, members=4)     # 40 members + 10 ana
+# virtual seconds between pod kills / until the replacement pod joins,
+# scaled so the shorter fast run still sees several kills
+CADENCE = {"full": (15.0, 8.0), "fast": (1.5, 1.0)}
 
 
 class FlakyBag(BagOfTasks):
@@ -23,7 +47,123 @@ class FlakyBag(BagOfTasks):
         return k
 
 
-def main():
+# ------------------------------------------------------------------ chaos
+def _member(dur=1.0, nbytes=MEMBER_NBYTES):
+    k = Kernel("synthetic.noop")
+    k.sim_duration = dur
+    k.output_nbytes = nbytes
+    return k
+
+
+def _coupled(pipelines, cycles, members):
+    """P producer ensembles streaming cycle outputs into channels consumed
+    by P analysis pipelines (the staging bench's coupled shape)."""
+    pipes = []
+    for p in range(pipelines):
+        ch = Channel(f"traj{p}")
+        pipes.append(PipelineSpec(
+            [Stage([TaskSpec(_member(), name=f"p{p}.c{c}.m{m}")
+                    for m in range(members)],
+                   name=f"cycle{c}", outputs=[ch])
+             for c in range(cycles)], name=f"producer{p}"))
+        pipes.append(PipelineSpec(
+            [Stage([TaskSpec(_member(dur=0.5, nbytes=0),
+                             name=f"a{p}.r{c}")],
+                   name=f"round{c}", inputs={"traj": ch})
+             for c in range(cycles)], name=f"analysis{p}"))
+    return pipes
+
+
+def _chaos_run(sizes, faults=None):
+    staging = StagingLayer(
+        locality=LocalityMap(SLOTS, slots_per_pod=SLOTS // PODS),
+        threshold_bytes=1024)
+    rt = PilotRuntime(slots=SLOTS, mode="sim", staging=staging,
+                      faults=faults, max_retries=3)
+    am = AppManager(rt)
+    prof = am.run(_coupled(**sizes))
+    return prof, am, rt
+
+
+def _retry_placement(graph):
+    """(off, back): tasks whose successful attempt ran off every pod a
+    pod-loss blamed, vs tasks that landed back on one (legitimate only
+    after the replacement pod joined or when nothing else was free)."""
+    off = back = 0
+    for t in graph.tasks.values():
+        lost = {h["pod"] for h in t.history
+                if h["outcome"] in ("pod_lost", "worker_died") and h["pod"]}
+        if not lost:
+            continue
+        done = [h for h in t.history if h["outcome"] == "done"]
+        if not done:
+            continue
+        if done[-1]["pod"] in lost:
+            back += 1
+        else:
+            off += 1
+    return off, back
+
+
+def chaos_bench(fast=False):
+    sizes = FAST if fast else FULL
+    kill_every, respawn_after = CADENCE["fast" if fast else "full"]
+    n_members = sizes["pipelines"] * sizes["cycles"] * sizes["members"]
+    print(f"== 5) chaos bench: pod kill every {kill_every:g}s over "
+          f"{n_members} coupled members ==")
+
+    base_prof, _, base_rt = _chaos_run(sizes)
+    base_rt.close()
+    print(f"  fault-free: ttc={base_prof.ttc:.1f}s "
+          f"n_failed={base_prof.n_failed}")
+
+    faults = FaultInjector(kill_every=kill_every,
+                           respawn_after=respawn_after)
+    prof, am, rt = _chaos_run(sizes, faults=faults)
+    off, back = _retry_placement(am.session.graph)
+    n_gc = rt.close()
+    ratio = prof.ttc / max(base_prof.ttc, 1e-12)
+    print(f"  chaos     : ttc={prof.ttc:.1f}s ({ratio:.2f}x) "
+          f"kills={faults.n_kills} attempts_lost={prof.n_pod_lost} "
+          f"retries={prof.n_retries} n_failed={prof.n_failed}")
+    print(f"  retries off dead pod: {off}; back on revived pod: {back}; "
+          f"spill files GCed at close: {n_gc}")
+
+    out = {
+        "slots": SLOTS, "pods": PODS,
+        "kill_every_s": kill_every, "respawn_after_s": respawn_after,
+        "sizes": sizes,
+        "baseline": {"ttc": round(base_prof.ttc, 3),
+                     "n_tasks": base_prof.n_tasks,
+                     "n_failed": base_prof.n_failed,
+                     "t_data": round(base_prof.t_data, 4)},
+        "chaos": {"ttc": round(prof.ttc, 3), "n_tasks": prof.n_tasks,
+                  "n_failed": prof.n_failed,
+                  "n_kills": faults.n_kills,
+                  "n_pod_lost": prof.n_pod_lost,
+                  "n_retries": prof.n_retries,
+                  "t_data": round(prof.t_data, 4),
+                  "retried_off_dead_pod": off,
+                  "retried_on_revived_pod": back,
+                  "pipelines": prof.results["pipelines"]},
+        "summary": {"ttc_degradation": round(ratio, 4)},
+    }
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    with open(os.path.join(root, "BENCH_faults.json"), "w") as f:
+        json.dump(out, f, indent=1)
+
+    assert prof.n_failed == 0, \
+        f"{prof.n_failed} tasks permanently failed under chaos"
+    assert faults.n_kills > 0 and prof.n_pod_lost > 0, \
+        "chaos run lost no in-flight attempts — kills missed all work"
+    assert off > 0, "no retry demonstrably re-placed off its dead pod"
+    assert ratio < 2.0, \
+        f"TTC degraded {ratio:.2f}x under chaos (>= 2x baseline)"
+    return out
+
+
+# ------------------------------------------------------------------ main
+def main(fast=False):
     print("== 1) bounded retries recover injected failures ==")
     cl = SingleClusterEnvironment(cores=4, max_retries=2)
     cl.allocate()
@@ -67,6 +207,11 @@ def main():
         print(f"  restarted makespan {prof.ttc:.0f}s "
               "(all tasks replayed from journal)")
 
+    chaos_bench(fast=fast)
+
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="small chaos sizes (CI smoke)")
+    main(fast=ap.parse_args().fast)

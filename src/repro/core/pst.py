@@ -80,6 +80,7 @@ class ExecutionProfile:
     n_canceled: int = 0
     n_retries: int = 0
     n_speculative: int = 0
+    n_pod_lost: int = 0     # attempts lost to pod/worker failure
     # busy slot-seconds accumulate here so utilization can be computed over
     # the WHOLE run at the end (not overwritten per cycle — that bug made
     # RE/SAL report only the last cycle's utilization)
@@ -786,6 +787,28 @@ class AppManager:
                             utilization=utilization, backlog=backlog,
                             per_pipeline=backlogs)
 
+    # ------------------------------------------------------------ faults
+    def _failure_counts(self, pr) -> Dict[str, int]:
+        """Per-pipeline fault accounting read back from ``Task.history``:
+        which ensemble members failed, how often they retried, and how
+        many attempts a pod/worker death cost them."""
+        tasks = self.session.graph.tasks
+        n_failed = n_retries = n_pod_lost = 0
+        for names in pr.stage_task_names:
+            for nm in names:
+                t = tasks.get(nm)
+                if t is None:
+                    continue
+                if t.state == TaskState.FAILED:
+                    n_failed += 1
+                n_retries += max(t.attempts - 1, 0)
+                n_pod_lost += sum(
+                    1 for h in t.history
+                    if h["outcome"] in ("pod_lost", "worker_died",
+                                        "heartbeat_timeout"))
+        return {"n_failed": n_failed, "n_retries": n_retries,
+                "n_pod_lost": n_pod_lost}
+
     # ------------------------------------------------------------ run
     def run(self, pipelines: Union[PipelineSpec, Iterable[PipelineSpec]]
             ) -> ExecutionProfile:
@@ -824,6 +847,7 @@ class AppManager:
         prof.n_canceled += rp.n_canceled
         prof.n_retries += rp.n_retries
         prof.n_speculative += rp.n_speculative
+        prof.n_pod_lost += rp.n_pod_lost
         prof.slot_busy += rp.slot_busy
         # utilization over the WHOLE session: busy slot-seconds / available
         # slot-seconds (accumulated, then computed once — not per cycle)
@@ -833,6 +857,7 @@ class AppManager:
             pr.name: {"state": pr.state,
                       "n_stages": len(pr.spec.stages),
                       "n_tasks": sum(len(ns) for ns in pr.stage_task_names),
+                      **self._failure_counts(pr),
                       **({"waiting_on": pr.waiting_on}
                          if pr.state == "blocked" else {})}
             for pr in self.pipeline_runs.values()}

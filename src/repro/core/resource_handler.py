@@ -108,6 +108,8 @@ class SingleClusterEnvironment:
     def deallocate(self):
         t0 = time.perf_counter()
         if self.pilot is not None:
-            self.pilot.runtime.journal.close()
+            # close() also GCs unreferenced spill files (journaled refs
+            # are kept — deallocate must not end restartability)
+            self.pilot.runtime.close()
             self.pilot.active = False
         self.overheads["t_core"] += time.perf_counter() - t0

@@ -80,6 +80,26 @@ class SlotTopology:
                                    *shape[2:])
         return SlotTopology(devices=dev, axis_names=self.axis_names)
 
+    def drop(self, slot_ids: Sequence[int]) -> "SlotTopology":
+        """Shrink-recarve: a new topology WITHOUT the given slots (pod
+        loss — the dead pod's devices leave the fleet).  Slot ids
+        renumber compactly, so the runtime applies this only at a
+        quiescent point (no task holds a slot id) and replica locality
+        keyed on the old pod names is reset by the caller.
+        """
+        dead = {int(i) for i in slot_ids}
+        if not dead:
+            return self
+        bad = [i for i in dead if i < 0 or i >= self.n_slots]
+        if bad:
+            raise ValueError(f"slot ids {sorted(bad)} out of range "
+                             f"0..{self.n_slots - 1}")
+        keep = [i for i in range(self.n_slots) if i not in dead]
+        if not keep:
+            raise ValueError("cannot drop every slot of the topology")
+        return SlotTopology(devices=self.devices[np.asarray(keep)],
+                            axis_names=self.axis_names)
+
     # ------------------------------------------------------------ queries
     @property
     def n_slots(self) -> int:

@@ -20,10 +20,28 @@ completed exchange in ensemble A schedules A's next cycle immediately while
 ensemble B is still simulating.  ``PilotRuntime.run(graph)`` is now a thin
 wrapper: one session, one bulk submit, one drain.
 
-Fault tolerance: bounded retries with backoff; straggler mitigation via
-speculative duplicates (sim+real); elastic pilot resize mid-run; journal for
-restart (dynamically injected tasks are journaled with a ``submitted``
-record so a restarted session can tell replayed structure from new work).
+Fault tolerance (repro.runtime.faults): pod death is a NORMAL event, not an
+abort.  A ``FaultInjector`` kills pods on the run clock (virtual in sim,
+wall-clock elapsed in real); real mode additionally detects worker-thread
+death structurally and hung tasks via heartbeat staleness.  A pod loss
+fails the in-flight attempts on that pod — each recorded in
+``Task.history`` with the pod it ran on (the scitq Execution-table shape) —
+retires the pod's slot ids (capacity shrinks; with a device topology the
+fleet shrink-recarves at the next quiescent point), drops the pod's staged
+replicas, and re-grants bounded retries EXCLUDING the failing pod.  Every
+launch carries an *epoch* (the attempt number); completions whose epoch no
+longer matches the task's live epoch are zombies and are ignored, so an
+abandoned attempt can never double-release slots or overwrite a retry.
+Journal records (``pod_lost``/``worker_died``/``heartbeat_timeout``) replay
+into ``Task.history`` on restart, so a run crashed mid-retry resumes with
+its attempt count and pod exclusions intact.
+
+Straggler mitigation via speculative duplicates (sim): clones route through
+the SAME staging manifests as their originals, so a clone's input transfers
+charge t_data exactly like the original's — the TTC decomposition stays
+disjoint.  Elastic pilot resize mid-run; journal for restart (dynamically
+injected tasks are journaled with a ``submitted`` record so a restarted
+session can tell replayed structure from new work).
 
 Mesh-aware slots: with a ``topology`` (repro.dist.topology.SlotTopology) the
 pilot's slots are *device submeshes* — a task occupying ``slots`` pilot slots
@@ -39,7 +57,8 @@ the task's ``t_data``; slot ids are granted locality-aware (free slots in
 pods that already hold the task's input replicas first) and the scheduling
 pass orders the frontier so input-local tasks run before tasks that would
 have to copy.  Slot-id accounting turns on even without a device topology
-(abstract ids) so locality works on plain pilots.
+(abstract ids) so locality — and pod-level fault exclusion — works on
+plain pilots.
 """
 from __future__ import annotations
 
@@ -52,6 +71,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional, Union
 
+from repro.runtime.faults import REVIVE, FailureDetector
 from repro.runtime.journal import Journal
 from repro.runtime.states import Task, TaskGraph, TaskState
 
@@ -68,6 +88,7 @@ class RuntimeProfile:
     n_canceled: int = 0
     n_retries: int = 0
     n_speculative: int = 0
+    n_pod_lost: int = 0                # attempts lost to pod/worker failure
     slot_busy: float = 0.0             # aggregate busy slot-seconds
     events: List[Dict[str, Any]] = field(default_factory=list)
 
@@ -81,6 +102,8 @@ class PilotRuntime:
                  topology=None,
                  journal: Optional[Journal] = None,
                  staging=None,
+                 faults=None,
+                 heartbeat_timeout: Optional[float] = None,
                  max_retries: int = 2,
                  straggler_factor: float = 0.0,
                  min_straggler_samples: int = 5,
@@ -95,21 +118,34 @@ class PilotRuntime:
         self.topology = topology
         if topology is not None and slots > topology.n_slots:
             raise ValueError(f"{slots} slots > {topology.n_slots} submeshes")
-        # free slot ids: tracked when the slots are device submeshes, and
-        # also (abstract ids) when a staging layer needs slot locality
+        # free slot ids: tracked when the slots are device submeshes, when
+        # a staging layer needs slot locality, and when a fault model needs
+        # pod membership (a pod is a group of slot ids)
         self._free_ids: Optional[List[int]] = (
             list(range(topology.n_slots))[::-1] if topology is not None
-            else list(range(slots))[::-1] if staging is not None
+            else list(range(slots))[::-1]
+            if (staging is not None or faults is not None
+                or heartbeat_timeout is not None)
             else None)
         # abstract ids ever minted and not retired (free + held): resize
         # must never re-mint an id a running task still holds
         self._minted: Optional[set] = \
             set(self._free_ids) if (topology is None
-                                    and staging is not None) else None
+                                    and self._free_ids is not None) else None
         self.staging = staging
         if staging is not None:
             staging.bind_runtime(self)
         self.journal = journal or Journal(None)
+        self.faults = faults
+        self.detector = FailureDetector(heartbeat_timeout) \
+            if heartbeat_timeout is not None else None
+        # pod-failure bookkeeping: retired ids stay OUT of the free pool
+        # (and out of re-minting) until the pod revives or the topology
+        # compacts them away at a quiescent point
+        self.dead_pods: set = set()
+        self._dead_ids: set = set()
+        self._dead_pod_ids: Dict[str, List[int]] = {}
+        self._drop_pending = False
         self.max_retries = max_retries
         self.straggler_factor = straggler_factor
         self.min_straggler_samples = min_straggler_samples
@@ -141,10 +177,12 @@ class PilotRuntime:
                 return 0
             if self.topology is not None \
                     and self._resize_to > self.topology.n_slots:
-                # re-carve only when every slot id is free: ids change
+                # re-carve only when every live slot id is free: ids change
                 # meaning, so in-flight tasks must drain first (the resize
-                # stays pending and re-tries each scheduling step)
-                if len(self._free_ids) < self.topology.n_slots:
+                # stays pending and re-tries each scheduling step); retired
+                # ids of a dead pod must compact away first too
+                n_live = self.topology.n_slots - len(self._dead_ids)
+                if self._dead_ids or len(self._free_ids) < n_live:
                     return 0
                 self.topology = self.topology.recarve(self._resize_to)
                 self._free_ids = list(range(self.topology.n_slots))[::-1]
@@ -153,13 +191,13 @@ class PilotRuntime:
                 # abstract (staging-only) ids track capacity directly:
                 # grow mints the lowest ids not currently outstanding
                 # (NEVER an id a running task holds — that would alias two
-                # tasks onto one locality domain), shrink retires free
-                # ones (held ids return to a pool the capacity gate no
-                # longer admits)
+                # tasks onto one locality domain — nor a dead pod's id),
+                # shrink retires free ones (held ids return to a pool the
+                # capacity gate no longer admits)
                 if delta > 0:
                     new, i = [], 0
                     while len(new) < delta:
-                        if i not in self._minted:
+                        if i not in self._minted and i not in self._dead_ids:
                             new.append(i)
                         i += 1
                     self._minted.update(new)
@@ -175,20 +213,101 @@ class PilotRuntime:
             self._resize_to = None
             return delta_out
 
+    # ------------------------------------------------------------ pods
+    def _pod_of(self, slot_id: int) -> str:
+        """Locality domain of a slot id (staging's map when bound, else a
+        one-slot-per-pod convention — so fault exclusion works without a
+        staging layer)."""
+        if self.staging is not None and self.staging.locality is not None:
+            return self.staging.locality.pod_of(int(slot_id))
+        return f"pod{int(slot_id)}"
+
+    def _task_pod(self, t: Task) -> Optional[str]:
+        ids = t.meta.get("slot_ids")
+        if not ids:
+            return None
+        return self._pod_of(min(ids))
+
+    def _all_live_ids(self) -> List[int]:
+        if self.topology is not None:
+            return [i for i in range((self.topology.n_slots))
+                    if i not in self._dead_ids]
+        if self._minted is not None:
+            return sorted(self._minted)
+        return []
+
+    def live_pods(self) -> List[str]:
+        return sorted({self._pod_of(i) for i in self._all_live_ids()})
+
+    def _pod_ids(self, pod: str) -> List[int]:
+        return [i for i in self._all_live_ids() if self._pod_of(i) == pod]
+
+    def _retire_ids(self, ids: List[int], pod: str):
+        """Take a dead pod's slot ids out of circulation."""
+        self.dead_pods.add(pod)
+        self._dead_pod_ids[pod] = list(ids)
+        self._dead_ids.update(ids)
+        if self._free_ids is not None:
+            dead = set(ids)
+            self._free_ids = [i for i in self._free_ids if i not in dead]
+        if self._minted is not None:
+            self._minted.difference_update(ids)
+
+    def inject_pod_failure(self, pod: Optional[str] = None):
+        """Kill a pod at the next scheduling step (chaos hook; creates a
+        bare FaultInjector when the runtime has none)."""
+        from repro.runtime.faults import FaultInjector
+        if self.faults is None:
+            self.faults = FaultInjector()
+        self.faults.kill_now(pod)
+
+    def _apply_topology_drop(self) -> bool:
+        """Shrink-recarve after pod loss: compact the device topology to
+        the surviving slots.  Slot ids renumber, so this applies only at a
+        quiescent point (every live id free); staged replica locations
+        keyed on old pod names reset conservatively."""
+        with self._lock:
+            if not self._drop_pending or self.topology is None:
+                return False
+            n_live = self.topology.n_slots - len(self._dead_ids)
+            if self._free_ids is None or len(self._free_ids) < n_live:
+                return False
+            self.topology = self.topology.drop(sorted(self._dead_ids))
+            n = self.topology.n_slots
+            self._free_ids = list(range(n))[::-1]
+            self._dead_ids.clear()
+            self._dead_pod_ids.clear()
+            self.dead_pods.clear()
+            self.slots = min(self.slots, n)
+            self._drop_pending = False
+            self.journal.record_event("topology_compacted", n_slots=n)
+            if self.staging is not None:
+                self.staging.on_topology_compacted(n)
+            return True
+
     # ------------------------------------------------------------ submeshes
     def _acquire_slots(self, t: Task):
         """Grant ``t.slots`` slot ids (no-op without id tracking).
 
         Called wherever busy-count is incremented; capacity gating
-        (busy <= self.slots <= topology.n_slots) guarantees availability.
+        (busy <= self.slots <= live submeshes) guarantees availability.
         With a staging layer the grant is locality-aware: free ids in pods
         that already hold the task's staged input replicas come first, so
-        the stage-in pass resolves to *link* instead of *copy*.
+        the stage-in pass resolves to *link* instead of *copy*.  A retry
+        whose history blames specific pods is granted ids AWAY from them
+        (availability still wins: excluded pods are used last, not never).
         """
         if self._free_ids is None:
             return
+        order: Optional[List[int]] = None
         if self.staging is not None and t.meta.get("staged_refs"):
             order = self.staging.preferred_ids(t, self._free_ids)
+        excl = t.excluded_pods() if t.history else ()
+        if excl:
+            base = order if order is not None else sorted(self._free_ids)
+            order = [i for i in base if self._pod_of(i) not in excl] \
+                + [i for i in base if self._pod_of(i) in excl]
+        if order is not None:
             ids = order[:t.slots]
             for i in ids:
                 self._free_ids.remove(i)
@@ -213,13 +332,15 @@ class PilotRuntime:
             self.staging.finish(t)
 
     def _release_slots(self, t: Task):
-        """Return t's slot ids exactly once (supersession may race a pop)."""
+        """Return t's slot ids exactly once (supersession may race a pop);
+        ids of a dead pod stay retired instead of re-entering the pool."""
         if self._free_ids is None or "slot_ids" not in t.meta:
             return
         if t.meta.get("slots_released"):
             return
         t.meta["slots_released"] = True
-        self._free_ids.extend(t.meta["slot_ids"])
+        self._free_ids.extend(i for i in t.meta["slot_ids"]
+                              if i not in self._dead_ids)
 
     def submesh_for(self, t: Task):
         """jax Mesh over the devices of the slots granted to ``t``."""
@@ -243,6 +364,21 @@ class PilotRuntime:
         if skipped:
             sess.prof.events.append({"event": "journal_skip", "n": skipped})
         return sess.drain()
+
+    # ------------------------------------------------------------ shutdown
+    def close(self, *, keep_durable: bool = True) -> int:
+        """Close the runtime: GC spill files the staging layer can prove
+        unreferenced (zero-ref blobs whose digest no journal record still
+        names — deleting a journaled ref's file would end restartability),
+        then close the journal.  ``keep_durable=False`` drops journaled
+        digests from the keep set too (a run that will never be replayed).
+        Returns the number of spill files reclaimed."""
+        n = 0
+        if self.staging is not None:
+            n = self.staging.gc_spill(self.journal,
+                                      keep_durable=keep_durable)
+        self.journal.close()
+        return n
 
 
 class RuntimeSession:
@@ -269,7 +405,7 @@ class RuntimeSession:
         self._cbq: deque = deque()           # terminal tasks awaiting callback
         # sim-mode state (persists across drains: the clock never resets)
         self._busy = 0
-        self._heap: List = []                # (v_finish, seq, task)
+        self._heap: List = []                # (v_finish, seq, epoch, task)
         self._seq = 0
         self._durations: Dict[str, List[float]] = {}
         self._spec_launched: Dict[str, Task] = {}
@@ -281,9 +417,16 @@ class RuntimeSession:
         # release) runs under the lock, so graph.done() alone must never
         # end the drain loop
         self._inflight = 0
+        # live (task name, launch epoch) -> (worker thread, task): the
+        # failure scan walks this; completion pops its own entry, and a
+        # completion whose entry is GONE was abandoned (pod kill / stale
+        # heartbeat) — its bookkeeping already happened, so it is a zombie
+        # and returns without touching the accounting
+        self._live_attempts: Dict[tuple, tuple] = {}
+        self._zombie_threads: set = set()
         # journal replay set, loaded once per session
-        self._replayed_done, self._replayed_results = \
-            runtime.journal.load_done()
+        self._replayed_done, self._replayed_results, \
+            self._replayed_history = runtime.journal.load_state()
 
     @property
     def busy_slots(self) -> int:
@@ -319,12 +462,28 @@ class RuntimeSession:
 
     def _replay_task(self, t: Task) -> bool:
         """Mark ``t`` DONE (with its recorded result) if the journal says
-        it already finished; the single shared replay rule."""
-        if t.name not in self._replayed_done or t.state.terminal:
-            return False
-        t.state = TaskState.DONE
-        t.result = self._replayed_results.get(t.name, t.result)
-        return True
+        it already finished; otherwise seed its attempt history from the
+        journal's failure records — a run crashed mid-retry resumes with
+        its attempt count and pod exclusions, not a fresh budget.  The
+        single shared replay rule."""
+        if t.name in self._replayed_done and not t.state.terminal:
+            t.state = TaskState.DONE
+            t.result = self._replayed_results.get(t.name, t.result)
+            return True
+        self._seed_history(t)
+        return False
+
+    def _seed_history(self, t: Task):
+        if t.state.terminal or t.attempts or t.history:
+            return
+        entries = self._replayed_history.get(t.name)
+        if not entries:
+            return
+        t.attempts = max(e["attempt"] for e in entries)
+        for e in entries:
+            t.history.append({"attempt": e["attempt"],
+                              "pod": e.get("pod"), "slot_ids": [],
+                              "outcome": e["outcome"]})
 
     # ------------------------------------------------------------ drain
     def drain(self) -> RuntimeProfile:
@@ -378,6 +537,51 @@ class RuntimeSession:
         while self._cbq:
             self.on_task_done(self._cbq.popleft(), self)
 
+    # ------------------------------------------------------------ failures
+    def _pick_victim(self) -> Optional[str]:
+        """Deterministic kill-victim choice when the injector names none:
+        the busiest live pod (most running attempts; lowest name breaks
+        ties), falling back to the first live pod."""
+        rt = self.rt
+        counts: Dict[str, int] = {}
+        if rt.mode == "sim":
+            running = (t for _, _, epoch, t in self._heap
+                       if t.meta.get("launch_epoch") == epoch
+                       and t.state == TaskState.RUNNING)
+        else:
+            running = (t for _, t in self._live_attempts.values()
+                       if t.state == TaskState.RUNNING)
+        for t in running:
+            p = rt._task_pod(t)
+            if p is not None and p not in rt.dead_pods:
+                counts[p] = counts.get(p, 0) + 1
+        if counts:
+            return max(sorted(counts), key=lambda p: counts[p])
+        live = rt.live_pods()
+        return live[0] if live else None
+
+    def _revive_pod(self, pod: str) -> int:
+        """A replacement pod joins under the dead pod's slot ids (fresh
+        pod: no data replicas — staging dropped them at the kill).
+        Returns the capacity gained (real mode credits its free count)."""
+        rt, prof = self.rt, self.prof
+        ids = rt._dead_pod_ids.pop(pod, None)
+        if not ids:
+            return 0
+        rt.dead_pods.discard(pod)
+        rt._dead_ids.difference_update(ids)
+        if rt._minted is not None:
+            rt._minted.update(ids)
+        if rt._free_ids is not None:
+            rt._free_ids.extend(sorted(ids, reverse=True))
+        rt.slots += len(ids)
+        if not rt._dead_ids:
+            rt._drop_pending = False
+        rt.journal.record_event("pod_revived", pod=pod, n_slots=len(ids))
+        prof.events.append({"event": "pod_revived", "pod": pod,
+                            "n_slots": len(ids), "v": self.vnow})
+        return len(ids)
+
     # ------------------------------------------------------------ sim mode
     def _overhead(self, fn):
         t0 = time.perf_counter()
@@ -393,13 +597,15 @@ class RuntimeSession:
         # launch — and extend the task's occupancy on the virtual clock
         t_data = rt._stage_in_task(t)
         t.attempts += 1
-        t.state = TaskState.RUNNING
+        t.error = None                 # a retry must not inherit the
+        t.state = TaskState.RUNNING    # previous attempt's error
         t.t_scheduled = time.perf_counter()
         t.v_started = self.vnow
-        rt.journal.record(t, "scheduled")
+        t.meta["launch_epoch"] = t.attempts
+        rt.journal.record(t, "scheduled", pod=rt._task_pod(t))
         heapq.heappush(self._heap,
                        (self.vnow + max(t.duration, 0.0) + t_data,
-                        self._seq, t))
+                        self._seq, t.attempts, t))
         self._seq += 1
 
     def _schedule_sim(self):
@@ -430,6 +636,7 @@ class RuntimeSession:
 
     def _finish_sim(self, t: Task):
         rt, graph, prof = self.rt, self.graph, self.prof
+        t.record_attempt("done", pod=rt._task_pod(t))
         t.state = TaskState.DONE
         t.v_finished = self.vnow
         t.t_finished = time.perf_counter()
@@ -441,23 +648,105 @@ class RuntimeSession:
         rt._staging_finish(t)
         if t.speculative_of:
             # the duplicate won: complete the straggling original
-            # and kill it (freeing its slot now)
+            # and kill it (freeing its slot now, if it held one — a
+            # pod-lost original may be back in the frontier as NEW)
             orig = graph.tasks.get(t.speculative_of)
             if orig is not None and not orig.state.terminal:
+                was_running = orig.state == TaskState.RUNNING
+                orig.record_attempt("superseded", pod=rt._task_pod(orig))
                 orig.state = TaskState.DONE
                 orig.v_finished = self.vnow
-                orig.meta["slot_freed"] = True
-                self._busy -= orig.slots
-                rt._release_slots(orig)
+                if was_running:
+                    orig.meta["slot_freed"] = True
+                    self._busy -= orig.slots
+                    rt._release_slots(orig)
+                orig.meta["launch_epoch"] = None
                 rt.journal.record(orig, "finished", by="speculative")
                 rt._staging_finish(orig)
                 self._queue_callback(orig)
             self._spec_launched.pop(t.speculative_of, None)
         else:
-            # original won: cancel its twin if any
+            # original won: cancel its twin if any.  The twin's slot and
+            # busy-count return at its heap pop; its journal record,
+            # staged-input holds and t_data charge settle HERE — a
+            # canceled clone still moved data
             twin = self._spec_launched.pop(t.name, None)
             if twin is not None and not twin.state.terminal:
+                twin.record_attempt("canceled", pod=rt._task_pod(twin))
                 twin.state = TaskState.CANCELED
+                rt.journal.record(twin, "canceled", by="original")
+                rt._staging_finish(twin)
+                prof.t_data += twin.t_data
+            self._queue_callback(t)
+
+    def _apply_faults_sim(self):
+        rt = self.rt
+        for kind, pod in rt.faults.pop_due(self.vnow):
+            if kind == REVIVE:
+                self._revive_pod(pod)
+            else:
+                victim = pod if pod is not None else self._pick_victim()
+                if victim is None or victim in rt.dead_pods:
+                    continue
+                self._kill_pod_sim(victim)
+
+    def _kill_pod_sim(self, pod: str):
+        rt, prof = self.rt, self.prof
+        ids = rt._pod_ids(pod)
+        if not ids:
+            return
+        idset = set(ids)
+        rt._retire_ids(ids, pod)
+        rt.slots = max(rt.slots - len(ids), 0)
+        victims = [t for _, _, epoch, t in self._heap
+                   if t.meta.get("launch_epoch") == epoch
+                   and t.state == TaskState.RUNNING
+                   and idset.intersection(t.meta.get("slot_ids", ()))]
+        for t in victims:
+            self._abandon_sim(t, pod)
+        if rt.staging is not None:
+            rt.staging.on_pod_lost(pod)
+        rt.journal.record_event("pod_lost", pod=pod, n_slots=len(ids),
+                                v=self.vnow)
+        prof.events.append({"event": "pod_lost", "pod": pod,
+                            "n_slots": len(ids), "v": self.vnow})
+        if rt.faults is not None and rt.faults.respawn_after is not None:
+            rt.faults.schedule_revive(pod, self.vnow)
+        elif rt.topology is not None:
+            rt._drop_pending = True
+
+    def _abandon_sim(self, t: Task, pod: str):
+        """Fail one in-flight sim attempt on a dead pod: invalidate its
+        launch epoch (the heap entry becomes a no-op), free its capacity,
+        record the attempt against the pod, and retry or fail."""
+        rt, prof = self.rt, self.prof
+        t.meta["launch_epoch"] = None
+        self._busy -= t.slots
+        rt._release_slots(t)
+        err = f"pod_lost: pod {pod} died at v={self.vnow:g}"
+        t.record_attempt("pod_lost", pod=pod, error=err)
+        t.error = err
+        prof.n_pod_lost += 1
+        rt.journal.record(t, "pod_lost", pod=pod)
+        if t.speculative_of is not None:
+            # a clone needs no retry — the original is still running
+            t.state = TaskState.CANCELED
+            rt.journal.record(t, "canceled", by="pod_lost")
+            rt._staging_finish(t)
+            prof.t_data += t.t_data
+            self._spec_launched.pop(t.speculative_of, None)
+            return
+        t.meta.pop("slot_ids", None)
+        t.meta.pop("slots_released", None)
+        if t.attempts <= rt.max_retries:
+            t.state = TaskState.NEW     # re-enters the frontier; the next
+            prof.n_retries += 1         # grant excludes this pod
+        else:
+            t.state = TaskState.FAILED
+            t.v_finished = self.vnow
+            rt.journal.record(t, "failed", pod=pod)
+            rt._staging_finish(t)
+            prof.t_data += t.t_data
             self._queue_callback(t)
 
     def _drain_sim(self):
@@ -467,7 +756,26 @@ class RuntimeSession:
             if rt.on_schedule is not None:
                 rt.on_schedule(rt, graph, self.vnow)
             rt._apply_resize()
+            rt._apply_topology_drop()
             self._overhead(self._schedule_sim)
+
+            # fault events due before the next completion preempt it: a
+            # pod death invalidates in-flight attempts, so their
+            # completions must not be delivered first.  With an empty
+            # heap, kills already due fire in place, and a pending
+            # replacement pod advances the clock to its arrival (tasks
+            # starved by the shrink wait for it instead of canceling).
+            if rt.faults is not None:
+                nf = rt.faults.next_time()
+                if nf is not None and (
+                        (self._heap and nf <= self._heap[0][0])
+                        or (not self._heap
+                            and (nf <= self.vnow
+                                 or (rt.faults.pending_revive()
+                                     and not graph.done())))):
+                    self.vnow = max(self.vnow, nf)
+                    self._overhead(self._apply_faults_sim)
+                    continue
 
             if not self._heap:
                 if graph.done():
@@ -475,11 +783,14 @@ class RuntimeSession:
                 # nothing runnable: cancel only truly unsatisfiable tasks
                 # (failed/canceled upstream, or wider than the whole pilot)
                 # so a narrow task queued behind a too-wide one still runs
-                # on the next pass — same rule as real mode
+                # on the next pass — same rule as real mode.  A pending
+                # pod respawn defers the too-wide rule: capacity returns.
+                reviving = (rt.faults is not None
+                            and rt.faults.pending_revive())
                 canceled = False
                 for t in graph.tasks.values():
                     if t.state == TaskState.NEW and (
-                            t.slots > rt.slots or any(
+                            (t.slots > rt.slots and not reviving) or any(
                                 graph.tasks[d].state.terminal
                                 and graph.tasks[d].state != TaskState.DONE
                                 for d in t.deps)):
@@ -488,7 +799,7 @@ class RuntimeSession:
                         rt._staging_finish(t)
                         self._queue_callback(t)
                         canceled = True
-                if not canceled:
+                if not canceled and not reviving:
                     # termination guard (unreachable by construction: a
                     # stuck NEW task always matches one rule above)
                     for t in graph.tasks.values():
@@ -502,11 +813,15 @@ class RuntimeSession:
                     break
                 continue
 
-            vfin, _, t = heapq.heappop(self._heap)
+            vfin, _, epoch, t = heapq.heappop(self._heap)
+            if t.meta.get("launch_epoch") != epoch:
+                # abandoned attempt (pod loss) or superseded original:
+                # capacity and slots were settled at abandonment — the
+                # entry is a zombie
+                continue
             if t.state.terminal:
-                # canceled twin / original superseded by its speculative
-                # duplicate: slot already freed at supersession; do NOT
-                # advance the clock to its stale finish time
+                # canceled twin: slot returns here; do NOT advance the
+                # clock to its stale finish time
                 if not t.meta.get("slot_freed"):
                     self._busy -= t.slots
                 rt._release_slots(t)
@@ -522,7 +837,9 @@ class RuntimeSession:
 
     def _speculate_sim(self):
         rt, prof = self.rt, self.prof
-        for vfin, sq, t in list(self._heap):
+        for vfin, sq, epoch, t in list(self._heap):
+            if t.meta.get("launch_epoch") != epoch:
+                continue
             hist = self._durations.get(t.stage, [])
             if (t.idempotent and not t.state.terminal
                     and t.speculative_of is None
@@ -541,20 +858,125 @@ class RuntimeSession:
                                speculative_of=t.name)
                     dup.state = TaskState.RUNNING
                     dup.v_started = max(self.vnow, trigger)
+                    dup.attempts = 1
+                    dup.meta["launch_epoch"] = 1
                     prof.n_speculative += 1
                     self._busy += t.slots
+                    # the clone reads the SAME staged inputs as the
+                    # original: share the manifest (extra holds on the
+                    # same blobs) so its transfers plan and charge t_data
+                    # exactly like the original's
+                    if rt.staging is not None:
+                        rt.staging.clone_manifest(t, dup)
                     rt._acquire_slots(dup)
+                    t_data = rt._stage_in_task(dup)
                     heapq.heappush(
                         self._heap,
-                        (max(self.vnow, trigger) + med, id(dup), dup))
+                        (dup.v_started + med + t_data,
+                         self._seq, dup.attempts, dup))
+                    self._seq += 1
+                    rt.journal.record(dup, "scheduled", speculative=True,
+                                      pod=rt._task_pod(dup))
                     self._spec_launched[t.name] = dup
 
     # ------------------------------------------------------------ real mode
+    def _check_faults_real(self):
+        """Real-mode failure scan, run each pass of the drain loop: fire
+        due injector events (elapsed wall clock), then detect dead worker
+        threads — a thread that exited without running its completion
+        bookkeeping (e.g. SystemExit through the isolation boundary) —
+        and, with a detector configured, stale heartbeats."""
+        rt = self.rt
+        now = time.perf_counter()
+        elapsed = now - self._t0
+        if rt.faults is not None:
+            for kind, pod in rt.faults.pop_due(elapsed):
+                if kind == REVIVE:
+                    self._free["n"] += self._revive_pod(pod)
+                else:
+                    victim = pod if pod is not None else self._pick_victim()
+                    if victim is not None and victim not in rt.dead_pods:
+                        self._kill_pod_real(victim, elapsed)
+        for (name, epoch), (th, t) in list(self._live_attempts.items()):
+            if t.meta.get("launch_epoch") != epoch \
+                    or t.state != TaskState.RUNNING:
+                continue
+            if not th.is_alive():
+                self._abandon_real(t, rt._task_pod(t), "worker_died",
+                                   credit_slots=True)
+            elif rt.detector is not None and rt.detector.stale(t, now):
+                self._abandon_real(t, rt._task_pod(t), "heartbeat_timeout",
+                                   credit_slots=True)
+
+    def _kill_pod_real(self, pod: str, elapsed: float):
+        rt, prof = self.rt, self.prof
+        ids = rt._pod_ids(pod)
+        if not ids:
+            return
+        idset = set(ids)
+        rt._retire_ids(ids, pod)
+        abandoned_w = 0
+        for (name, epoch), (th, t) in list(self._live_attempts.items()):
+            if t.meta.get("launch_epoch") == epoch \
+                    and idset.intersection(t.meta.get("slot_ids", ())):
+                abandoned_w += t.slots
+                self._abandon_real(t, pod, "pod_lost", credit_slots=False)
+        rt.slots = max(rt.slots - len(ids), 0)
+        # the pod's free slots leave capacity; abandoned widths return
+        # (their surviving ids re-entered the id pool at release)
+        self._free["n"] += abandoned_w - len(ids)
+        if rt.staging is not None:
+            rt.staging.on_pod_lost(pod)
+        rt.journal.record_event("pod_lost", pod=pod, n_slots=len(ids))
+        prof.events.append({"event": "pod_lost", "pod": pod,
+                            "n_slots": len(ids), "elapsed": elapsed})
+        if rt.faults is not None and rt.faults.respawn_after is not None:
+            rt.faults.schedule_revive(pod, elapsed)
+        elif rt.topology is not None:
+            rt._drop_pending = True
+
+    def _abandon_real(self, t: Task, pod: Optional[str], reason: str, *,
+                      credit_slots: bool):
+        """Fail one in-flight real attempt (pod kill, dead worker thread,
+        stale heartbeat).  The worker thread cannot be stopped; popping
+        the live-attempt entry turns its eventual completion into a
+        zombie that skips all bookkeeping."""
+        rt, prof = self.rt, self.prof
+        entry = self._live_attempts.pop((t.name, t.meta.get("launch_epoch")),
+                                        None)
+        if entry is not None:
+            self._zombie_threads.add(entry[0])
+        t.meta["launch_epoch"] = None
+        self._inflight -= 1
+        if credit_slots:
+            self._free["n"] += t.slots
+        rt._release_slots(t)
+        err = f"{reason}" + (f": pod {pod}" if pod else "")
+        t.record_attempt(reason, pod=pod, error=err)
+        t.error = err
+        prof.n_pod_lost += 1
+        rt.journal.record(t, reason, pod=pod)
+        t.meta.pop("slot_ids", None)
+        t.meta.pop("slots_released", None)
+        if t.attempts <= rt.max_retries:
+            t.state = TaskState.NEW
+            prof.n_retries += 1
+        else:
+            t.state = TaskState.FAILED
+            rt.journal.record(t, "failed", pod=pod)
+            prof.t_data += t.t_data
+            rt._staging_finish(t)
+            self._queue_callback(t)
+
     def _execute_real(self, t: Task):
         rt, prof, cv = self.rt, self.prof, self._cv
+        epoch = t.meta.get("launch_epoch")
         t.t_started = time.perf_counter()
         outcome = TaskState.DONE
         t.meta.pop("t_data_kernel", None)     # fresh window per attempt
+        if rt.detector is not None:
+            rt.detector.beat(t)
+        res = None
         try:
             # staged-input transfers: between pop_ready and kernel launch,
             # on the worker (transfers overlap across tasks); the restamp
@@ -562,7 +984,10 @@ class RuntimeSession:
             rt._stage_in_task(t)
             t.t_started = time.perf_counter()
             if t.run is not None:
-                t.result = t.run(t)
+                # held locally until past the zombie check below: an
+                # abandoned attempt's late return must not clobber the
+                # retry's result
+                res = t.run(t)
             elif t.duration:
                 time.sleep(t.duration)
         except Exception as e:  # noqa: BLE001 - task isolation boundary
@@ -576,6 +1001,15 @@ class RuntimeSession:
             # retry to NEW any earlier lets the drain thread reschedule it
             # (and re-grant slot ids) before this attempt's bookkeeping
             # releases the old ones
+            if self._live_attempts.pop((t.name, epoch), None) is None:
+                # abandoned while running (pod kill / stale heartbeat):
+                # the abandonment already settled slots, capacity and
+                # history — this completion is a zombie
+                cv.notify_all()
+                return
+            pod = rt._task_pod(t)
+            if t.run is not None and outcome == TaskState.DONE:
+                t.result = res
             self._free["n"] += t.slots
             rt._release_slots(t)
             # in-kernel lazy derefs (ctx["staging"].get) charged to t_data
@@ -585,11 +1019,16 @@ class RuntimeSession:
                        - t.meta.get("t_data_kernel", 0.0), 0.0)
             prof.t_exec += span
             prof.slot_busy += span * t.slots
+            t.record_attempt("done" if outcome == TaskState.DONE
+                             else "failed", pod=pod, error=t.error)
             t.state = outcome
             if outcome == TaskState.NEW:
                 prof.n_retries += 1
+                t.meta.pop("slot_ids", None)
+                t.meta.pop("slots_released", None)
             rt.journal.record(
-                t, "finished" if t.state == TaskState.DONE else "failed")
+                t, "finished" if t.state == TaskState.DONE else "failed",
+                pod=pod)
             if t.state.terminal:
                 # cumulative across attempts, charged once at the end
                 prof.t_data += t.t_data
@@ -606,9 +1045,16 @@ class RuntimeSession:
             self._drain_real_loop(workers)
         finally:
             # join even when a user on_done callback raised, so no worker
-            # is left mutating the profile/journal after drain() returns
+            # is left mutating the profile/journal after drain() returns.
+            # Abandoned (zombie) threads may be stuck in a hung kernel:
+            # they get a bounded join — their completion path is inert
+            # (the live-attempt pop already failed), so leaking the
+            # daemon thread is safe
             for th in workers:
-                th.join()
+                if th in self._zombie_threads:
+                    th.join(timeout=0.2)
+                else:
+                    th.join()
 
     def _drain_real_loop(self, workers: List[threading.Thread]):
         rt, graph, prof = self.rt, self.graph, self.prof
@@ -619,6 +1065,8 @@ class RuntimeSession:
                 if rt.on_schedule is not None:
                     rt.on_schedule(rt, graph, None)
                 self._free["n"] += rt._apply_resize()   # elastic grow/shrink
+                rt._apply_topology_drop()
+                self._check_faults_real()
                 t0 = time.perf_counter()
                 # pop from the incremental frontier, re-checking capacity
                 # per task; too-wide tasks are skipped (narrower ones behind
@@ -653,12 +1101,15 @@ class RuntimeSession:
                     t.meta["dep_results"] = {
                         d: graph.tasks[d].result for d in t.deps}
                     t.attempts += 1
+                    t.error = None         # no stale error into a retry
                     t.state = TaskState.RUNNING
                     t.t_scheduled = time.perf_counter()
-                    rt.journal.record(t, "scheduled")
+                    t.meta["launch_epoch"] = t.attempts
+                    rt.journal.record(t, "scheduled", pod=rt._task_pod(t))
                     self._inflight += 1
                     th = threading.Thread(target=self._execute_real,
                                           args=(t,), daemon=True)
+                    self._live_attempts[(t.name, t.attempts)] = (th, t)
                     workers.append(th)
                     th.start()
                 for t in skipped:
@@ -671,11 +1122,16 @@ class RuntimeSession:
                     # nothing runnable: cancel unsatisfiable tasks — failed
                     # upstream deps, or wider than the whole idle pilot
                     # (nothing in flight, so free == capacity: such a task
-                    # can never start and would spin this loop forever)
+                    # can never start and would spin this loop forever).
+                    # A pending pod respawn defers the too-wide rule:
+                    # the capacity is coming back.
+                    reviving = (rt.faults is not None
+                                and rt.faults.pending_revive())
                     for t in graph.tasks.values():
                         if t.state != TaskState.NEW:
                             continue
-                        if t.slots > self._free["n"] or any(
+                        if (t.slots > self._free["n"] and not reviving) \
+                                or any(
                                 graph.tasks[d].state.terminal
                                 and graph.tasks[d].state != TaskState.DONE
                                 for d in t.deps):

@@ -47,6 +47,14 @@ class Journal:
         rec.update(extra)
         self._fh.write(json.dumps(rec, default=str) + "\n")
 
+    def record_event(self, event: str, **extra):
+        """Run-level (taskless) record: pod_lost, pod_revived, topology
+        compaction.  Replay parsers that key on ``task`` skip these."""
+        if self._fh is None:
+            return
+        rec = {"t": time.time(), "event": event, **extra}
+        self._fh.write(json.dumps(rec, default=str) + "\n")
+
     def record_flow(self, event: str, channel: str, producer: str,
                     value=None, consumer: Optional[str] = None,
                     digest: Optional[str] = None,
@@ -89,27 +97,72 @@ class Journal:
             self._fh = None
 
     # -------------------------------------------------------------- replay
-    def load_done(self):
-        """Parse the journal once: (set of DONE task names, name->result).
+    # attempt-terminating events whose records seed Task.history on restart
+    _ATTEMPT_EVENTS = ("failed", "pod_lost", "worker_died",
+                       "heartbeat_timeout")
 
-        Sessions load this at open and apply it per ``submit`` — dynamically
-        injected tasks replay the same way as prebuilt graphs."""
+    def load_state(self):
+        """Parse the journal once: ``(done, results, history)``.
+
+        ``done``/``results`` replay finished tasks (as before).
+        ``history`` maps task name -> list of failed-attempt records
+        ``{"attempt", "pod", "outcome"}`` for tasks NOT done — the
+        retry-remembering set: a run that crashed mid-retry restarts with
+        its attempt count and failing-pod exclusions intact instead of a
+        fresh retry budget."""
         done: set = set()
         results: Dict[str, object] = {}
+        history: Dict[str, list] = {}
         if not self.path or not os.path.exists(self.path):
-            return done, results
+            return done, results, history
         with open(self.path) as f:
             for line in f:
                 try:
                     rec = json.loads(line)
                 except json.JSONDecodeError:
                     continue  # torn write at crash: ignore
-                if rec.get("event") == "finished" and \
-                        rec.get("state") == "DONE":
+                ev = rec.get("event")
+                if ev == "finished" and rec.get("state") == "DONE":
                     done.add(rec["task"])
                     if "result" in rec:
                         results[rec["task"]] = rec["result"]
+                elif ev in self._ATTEMPT_EVENTS and "task" in rec:
+                    history.setdefault(rec["task"], []).append(
+                        {"attempt": int(rec.get("attempts", 1)),
+                         "pod": rec.get("pod"), "outcome": ev})
+        # dedupe per (attempt): terminal failure writes both a
+        # reason record and a "failed" record for the same attempt
+        for name, entries in history.items():
+            seen, uniq = set(), []
+            for h in entries:
+                if h["attempt"] not in seen:
+                    seen.add(h["attempt"])
+                    uniq.append(h)
+            history[name] = uniq
+        return done, results, history
+
+    def load_done(self):
+        """(set of DONE task names, name->result) — see :meth:`load_state`."""
+        done, results, _ = self.load_state()
         return done, results
+
+    def load_digests(self) -> set:
+        """Every staged-blob digest any journal record references — the
+        KEEP set for spill-file GC: deleting a referenced blob's spill
+        file would end the restartability of journaled refs."""
+        digests: set = set()
+        if not self.path or not os.path.exists(self.path):
+            return digests
+        with open(self.path) as f:
+            for line in f:
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                d = rec.get("digest")
+                if d:
+                    digests.add(d)
+        return digests
 
     def load_flow(self):
         """Parse data-flow records: ``(puts, takes)`` where puts maps

@@ -56,6 +56,11 @@ class Task:
     tid: str = field(default_factory=lambda: f"t{next(_tid_counter):06d}")
     state: TaskState = TaskState.NEW
     attempts: int = 0
+    # execution history: one JSON-able record per finished attempt
+    # ({"attempt", "pod", "slot_ids", "outcome", "error"}) — the scitq
+    # Execution-table analogue.  Drives bounded retries that EXCLUDE the
+    # failing pod from the re-grant, and survives restarts via the journal.
+    history: List[Dict[str, Any]] = field(default_factory=list)
     # seconds spent moving this task's data (staged-ref transfers executed
     # between pop_ready and launch, plus in-kernel lazy derefs) — the
     # per-task slice of the paper's t_data term
@@ -70,6 +75,34 @@ class Task:
     v_started: float = 0.0
     v_finished: float = 0.0
     speculative_of: Optional[str] = None
+
+    # ------------------------------------------------------------ attempts
+    def record_attempt(self, outcome: str, *, pod: Optional[str] = None,
+                       error: Optional[str] = None) -> Dict[str, Any]:
+        """Append one attempt record to :attr:`history` (outcome in
+        done|failed|pod_lost|worker_died|heartbeat_timeout|superseded|
+        canceled)."""
+        rec = {"attempt": self.attempts, "pod": pod,
+               "slot_ids": list(self.meta.get("slot_ids", ())),
+               "outcome": outcome}
+        if error:
+            rec["error"] = error
+        self.history.append(rec)
+        return rec
+
+    def excluded_pods(self) -> set:
+        """Pods a retry must avoid: every pod a FAILED attempt ran on
+        (the retry-remembering model — availability still wins: the
+        scheduler falls back to an excluded pod when nothing else is
+        free)."""
+        from repro.runtime.faults import FAILED_OUTCOMES
+        return {h["pod"] for h in self.history
+                if h.get("pod") and h["outcome"] in FAILED_OUTCOMES}
+
+    def beat(self):
+        """Heartbeat hook for long-running kernels (real mode): refreshes
+        the liveness timestamp the failure detector checks."""
+        self.meta["heartbeat"] = time.perf_counter()
 
 
 def _task_state_get(self: Task) -> TaskState:

@@ -205,6 +205,52 @@ class StagingLayer:
             ("staged_in", idx, ref))
         return ref
 
+    def clone_manifest(self, orig, clone):
+        """Route a speculative twin through the SAME staging manifests as
+        its original: the clone holds its own reference on every ref (so
+        either twin's terminal release is balanced) and its stage-in pass
+        plans/executes — and charges to the clone's ``t_data`` — the same
+        transfers, to the CLONE's granted pod."""
+        entries = orig.meta.get("staged_refs") or []
+        if not entries:
+            return
+        with self._lock:
+            for _kind, _key, ref in entries:
+                self.store.retain(ref)
+        clone.meta["staged_refs"] = list(entries)
+
+    # ------------------------------------------------------------ failures
+    def on_pod_lost(self, pod: str):
+        """The pod's memory is gone: invalidate its replicas.  Blobs keep
+        serving from other replicas / host / spill — the next consumer in
+        that pod copies instead of linking."""
+        with self._lock:
+            self.store.drop_location(pod)
+
+    def on_topology_compacted(self, n_slots: int):
+        """Shrink-recarve renumbered the slot ids: pod-keyed replica
+        bookkeeping is stale wholesale (conservative reset — consumers
+        fall back to host/spill copies), and the locality map re-keys to
+        the new slot count."""
+        with self._lock:
+            self.store.drop_pod_locations()
+            if self.locality is not None:
+                self.locality = LocalityMap(
+                    n_slots=max(n_slots, 1),
+                    slots_per_pod=self.locality.slots_per_pod)
+                self.planner.locality = self.locality
+
+    # ------------------------------------------------------------ gc
+    def gc_spill(self, journal=None, *, keep_durable: bool = True) -> int:
+        """Session-close disk reclaim: delete zero-ref spill files the
+        journal never references.  ``keep_durable=False`` drops the
+        journal keep-set too (zero-ref files go regardless of journaled
+        refs — ends restartability).  Returns files deleted."""
+        referenced = (journal.load_digests()
+                      if keep_durable and journal is not None
+                      else frozenset())
+        return self.store.gc_spill(referenced)
+
     # ------------------------------------------------------------ stage-in
     def stage_in(self, task, mode: str) -> float:
         """Execute every planned transfer for ``task`` to its granted pod.

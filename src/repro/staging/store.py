@@ -221,6 +221,23 @@ class ObjectStore:
             if b is not None and location:
                 b.locations.add(location)
 
+    def drop_location(self, location: str):
+        """Invalidate every replica at ``location`` (the pod died: its
+        memory is gone).  Blobs whose ONLY replica lived there survive —
+        the in-memory bytes / spill file / other replicas still serve
+        consumers, just never as a link into the dead pod."""
+        with self._lock:
+            for b in self._blobs.values():
+                b.locations.discard(location)
+
+    def drop_pod_locations(self):
+        """Invalidate every non-HOST replica (topology compaction: slot
+        ids — and therefore pod names — renumbered, so pod-keyed replica
+        bookkeeping is stale wholesale)."""
+        with self._lock:
+            for b in self._blobs.values():
+                b.locations.intersection_update({HOST})
+
     def register_virtual(self, ref: StagedRef):
         """Re-register a journal-replayed virtual ref (DES restart): the
         blob never had a payload, so its nbytes and replica locations
@@ -313,6 +330,30 @@ class ObjectStore:
             for fn in os.listdir(self.spill_dir):
                 if fn.endswith(".blob"):
                     os.unlink(os.path.join(self.spill_dir, fn))
+
+    def gc_spill(self, referenced=frozenset()) -> int:
+        """Reclaim spill files that nothing can ever need again: zero-ref
+        (no live consumer holds the blob) AND not in ``referenced`` (the
+        digests the journal names — deleting those would break replay of
+        journaled refs).  Returns the number of files deleted.  Live
+        blobs whose bytes exist only on disk keep their files."""
+        if not self.spill_dir:
+            return 0
+        n = 0
+        with self._lock:
+            for fn in os.listdir(self.spill_dir):
+                if not fn.endswith(".blob"):
+                    continue
+                digest = fn[:-len(".blob")]
+                if digest in referenced:
+                    continue
+                b = self._blobs.get(digest)
+                if b is not None and b.refcount > 0:
+                    continue
+                os.unlink(os.path.join(self.spill_dir, fn))
+                self.stats["spill_gcs"] = self.stats.get("spill_gcs", 0) + 1
+                n += 1
+        return n
 
     # ------------------------------------------------------------ spill
     def spill(self, digest: str) -> bool:
