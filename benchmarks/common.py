@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import json
 import os
-import time
 from typing import Any, Dict, List
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")

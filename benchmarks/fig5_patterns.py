@@ -9,6 +9,8 @@ the local-journal RTS overhead here — same decomposition, µs-ms magnitudes;
 DESIGN.md §8.2)."""
 from __future__ import annotations
 
+import os
+
 from benchmarks.common import CharCountApp, print_csv, save_results
 from repro.core import (Kernel, Pipeline, ReplicaExchange,
                         SimulationAnalysisLoop, SingleClusterEnvironment)
@@ -64,8 +66,13 @@ def run(scales=SCALES, mode: str = "real") -> list:
                 ("sal", lambda: CCSAL(maxiterations=1,
                                       simulation_instances=n,
                                       analysis_instances=n))):
-            cl = SingleClusterEnvironment(resource="local.cpu", cores=n,
-                                          walltime=10, mode=mode)
+            # REPRO_JOURNAL_DIR (set in CI) journals every run so the
+            # sanitizer gate can replay the invariants; names are distinct
+            # per cell to keep restart-replay from crossing runs
+            cl = SingleClusterEnvironment(
+                resource="local.cpu", cores=n, walltime=10, mode=mode,
+                database_url=os.environ.get("REPRO_JOURNAL_DIR"),
+                database_name=f"fig5_{pname}_{n}_{mode}")
             cl.allocate()
             prof = cl.run(make())
             cl.deallocate()

@@ -5,8 +5,7 @@ replica count (it runs serially over replicas)."""
 from __future__ import annotations
 
 from benchmarks.common import print_csv, save_results
-from benchmarks.fig7_re_strong import (EXCH_PER_REPLICA, SIM_SECONDS,
-                                       REScaling)
+from benchmarks.fig7_re_strong import REScaling
 from repro.core import SingleClusterEnvironment
 
 SCALES = (20, 40, 80, 160, 320, 640, 1280, 2560)

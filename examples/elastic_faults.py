@@ -5,6 +5,10 @@ ensemble, with retries re-placed off the dead pod and TTC degrading
 gracefully instead of the run aborting.
 
     PYTHONPATH=src python examples/elastic_faults.py [--fast]
+    PYTHONPATH=src python examples/elastic_faults.py --validate-only
+
+Set REPRO_JOURNAL_DIR to journal the bag-of-tasks and chaos runs (the CI
+sanitizer gate replays the journals' invariants afterwards).
 
 Emits BENCH_faults.json (repo root): fault-free baseline vs chaos run
 (a pod killed every KILL_EVERY virtual seconds, replacement pods joining
@@ -16,13 +20,14 @@ their dead pods, and TTC stays under 2x the fault-free baseline.
 import argparse
 import json
 import os
+import sys
 import tempfile
 
 from repro.core import AppManager, BagOfTasks, Channel, Kernel, \
     PipelineSpec, SingleClusterEnvironment, Stage, TaskSpec
 from repro.runtime.executor import PilotRuntime
 from repro.runtime.faults import FaultInjector
-from repro.runtime.journal import Journal
+from repro.runtime.journal import Journal, journal_from_env
 from repro.runtime.states import Task, TaskGraph
 from repro.staging import LocalityMap, StagingLayer
 
@@ -74,14 +79,17 @@ def _coupled(pipelines, cycles, members):
     return pipes
 
 
-def _chaos_run(sizes, faults=None):
+def _chaos_run(sizes, faults=None, journal_name="faults_baseline"):
     staging = StagingLayer(
         locality=LocalityMap(SLOTS, slots_per_pod=SLOTS // PODS),
         threshold_bytes=1024)
+    # distinct journal names per run: baseline and chaos share task names,
+    # so one file would make the second run replay the first's results
     rt = PilotRuntime(slots=SLOTS, mode="sim", staging=staging,
-                      faults=faults, max_retries=3)
+                      faults=faults, max_retries=3,
+                      journal=journal_from_env(journal_name))
     am = AppManager(rt)
-    prof = am.run(_coupled(**sizes))
+    prof = am.run(_coupled(**sizes), validate="error")
     return prof, am, rt
 
 
@@ -119,7 +127,8 @@ def chaos_bench(fast=False):
 
     faults = FaultInjector(kill_every=kill_every,
                            respawn_after=respawn_after)
-    prof, am, rt = _chaos_run(sizes, faults=faults)
+    prof, am, rt = _chaos_run(sizes, faults=faults,
+                              journal_name="faults_chaos")
     off, back = _retry_placement(am.session.graph)
     n_gc = rt.close()
     ratio = prof.ttc / max(base_prof.ttc, 1e-12)
@@ -163,9 +172,20 @@ def chaos_bench(fast=False):
 
 
 # ------------------------------------------------------------------ main
+def validate_only(fast=False) -> int:
+    """Pre-flight lint of the chaos bench's coupled pipelines."""
+    from repro.analysis import validate_app
+    report = validate_app(_coupled(**(FAST if fast else FULL)))
+    print(report.format())
+    return 0 if report.ok else 1
+
+
 def main(fast=False):
     print("== 1) bounded retries recover injected failures ==")
-    cl = SingleClusterEnvironment(cores=4, max_retries=2)
+    cl = SingleClusterEnvironment(
+        cores=4, max_retries=2,
+        database_url=os.environ.get("REPRO_JOURNAL_DIR"),
+        database_name="faults_bag")
     cl.allocate()
     prof = cl.run(FlakyBag(instances=10))
     cl.deallocate()
@@ -214,4 +234,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="small chaos sizes (CI smoke)")
-    main(fast=ap.parse_args().fast)
+    ap.add_argument("--validate-only", action="store_true",
+                    help="lint the chaos pipelines and exit (no run)")
+    args = ap.parse_args()
+    if args.validate_only:
+        sys.exit(validate_only(fast=args.fast))
+    main(fast=args.fast)

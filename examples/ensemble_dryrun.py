@@ -14,17 +14,18 @@ of the running task, so placement is decided by the pilot, not the member.
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-import time
+# the XLA host-device flag must be set before jax loads: E402 is the point
+import time  # noqa: E402
 
-import jax
-from repro.configs import SHAPES, get_config, input_specs
-from repro.core import AppManager, Kernel, PipelineSpec, Stage, TaskSpec
-from repro.core.kernel_plugin import register_kernel
-from repro.dist.sharding import batch_shardings, state_shardings
-from repro.dist.topology import SlotTopology
-from repro.launch.mesh import make_production_mesh
-from repro.runtime.executor import PilotRuntime
-from repro.train import build_train_step, train_state_specs
+import jax  # noqa: E402
+from repro.configs import SHAPES, get_config, input_specs  # noqa: E402
+from repro.core import AppManager, Kernel, PipelineSpec, Stage, TaskSpec  # noqa: E402
+from repro.core.kernel_plugin import register_kernel  # noqa: E402
+from repro.dist.sharding import batch_shardings, state_shardings  # noqa: E402
+from repro.dist.topology import SlotTopology  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.runtime.executor import PilotRuntime  # noqa: E402
+from repro.train import build_train_step, train_state_specs  # noqa: E402
 
 
 @register_kernel("dryrun.compile_member",

@@ -17,12 +17,19 @@ no teardown between cycles).
 
     PYTHONPATH=src python examples/pst_coupled.py --sim   # DES, instant
     PYTHONPATH=src python examples/pst_coupled.py         # real kernels
+    PYTHONPATH=src python examples/pst_coupled.py --validate-only
+                                                   # pre-flight lint only
+
+Set REPRO_JOURNAL_DIR to journal the run (the CI sanitizer gate replays
+the journal's invariants with ``python -m repro.analysis sanitize``).
 """
 import argparse
+import sys
 
 from repro.core import AppManager, Channel, Kernel, PipelineSpec, Stage, \
     TaskSpec
 from repro.runtime.executor import PilotRuntime
+from repro.runtime.journal import journal_from_env
 
 CYCLES = 3
 MEMBERS = 4
@@ -64,10 +71,21 @@ def build(mode):
     return [producer, analysis, feedback]
 
 
+def validate_only(mode) -> int:
+    """Pre-flight lint of the declared pipelines; no task launches."""
+    from repro.analysis import validate_app
+    report = validate_app(build(mode))
+    print(report.format())
+    return 0 if report.ok else 1
+
+
 def main(mode):
-    rt = PilotRuntime(slots=MEMBERS + 2, mode=mode)
+    # journal name carries the mode: a sim journal must not be replayed
+    # into a real run (same task names would be skipped as already done)
+    rt = PilotRuntime(slots=MEMBERS + 2, mode=mode,
+                      journal=journal_from_env(f"pst_coupled_{mode}"))
     am = AppManager(rt)
-    prof = am.run(build(mode))
+    prof = am.run(build(mode), validate="error")
 
     pipes = prof.results["pipelines"]
     print(f"mode={mode}: ttc={prof.ttc:.2f}s, {prof.n_tasks} tasks, "
@@ -101,5 +119,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--sim", action="store_true",
                     help="DES mode: modeled durations, instant wall clock")
+    ap.add_argument("--validate-only", action="store_true",
+                    help="lint the declared pipelines and exit (no run)")
     args = ap.parse_args()
-    main("sim" if args.sim else "real")
+    mode = "sim" if args.sim else "real"
+    if args.validate_only:
+        sys.exit(validate_only(mode))
+    main(mode)

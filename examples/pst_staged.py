@@ -15,12 +15,18 @@ express).  The pilot runs with a ``repro.staging.StagingLayer``:
 
     PYTHONPATH=src python examples/pst_staged.py          # real kernels
     PYTHONPATH=src python examples/pst_staged.py --sim    # DES, modeled
+    PYTHONPATH=src python examples/pst_staged.py --validate-only
+
+Set REPRO_JOURNAL_DIR to journal the run (the CI sanitizer gate replays
+the journal's invariants with ``python -m repro.analysis sanitize``).
 """
 import argparse
+import sys
 
 from repro.core import AppManager, Channel, Kernel, PipelineSpec, Stage, \
     TaskSpec
 from repro.runtime.executor import PilotRuntime
+from repro.runtime.journal import journal_from_env
 from repro.staging import LocalityMap, StagingLayer
 
 CYCLES = 3
@@ -63,14 +69,26 @@ def build(mode):
     return [producer, *analyses], traj
 
 
+def validate_only(mode) -> int:
+    """Pre-flight lint of the declared pipelines; no task launches."""
+    from repro.analysis import validate_app
+    pipes, _traj = build(mode)
+    report = validate_app(pipes)
+    print(report.format())
+    return 0 if report.ok else 1
+
+
 def main(mode):
     staging = StagingLayer(
         locality=LocalityMap(SLOTS, slots_per_pod=SLOTS // 2),
         threshold_bytes=1 << 10)
-    rt = PilotRuntime(slots=SLOTS, mode=mode, staging=staging)
+    # journal name carries the mode: a sim journal must not be replayed
+    # into a real run (same task names would be skipped as already done)
+    rt = PilotRuntime(slots=SLOTS, mode=mode, staging=staging,
+                      journal=journal_from_env(f"pst_staged_{mode}"))
     am = AppManager(rt)
     pipes, traj = build(mode)
-    prof = am.run(pipes)
+    prof = am.run(pipes, validate="error")
 
     print(f"mode={mode}: ttc={prof.ttc:.2f}s, {prof.n_tasks} tasks, "
           f"t_data={prof.t_data:.4f}s")
@@ -111,4 +129,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--sim", action="store_true",
                     help="DES mode: modeled durations and transfer costs")
-    main("sim" if ap.parse_args().sim else "real")
+    ap.add_argument("--validate-only", action="store_true",
+                    help="lint the declared pipelines and exit (no run)")
+    args = ap.parse_args()
+    mode = "sim" if args.sim else "real"
+    if args.validate_only:
+        sys.exit(validate_only(mode))
+    main(mode)

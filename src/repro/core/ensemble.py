@@ -10,9 +10,7 @@ round-trip.  benchmarks/fused_dispatch.py quantifies both against task mode.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

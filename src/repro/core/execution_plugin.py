@@ -24,7 +24,7 @@ from __future__ import annotations
 import time
 from typing import List
 
-from repro.core.patterns import (BagOfTasks, ExecutionPattern, Pipeline,
+from repro.core.patterns import (ExecutionPattern, Pipeline,
                                  ReplicaExchange, SimulationAnalysisLoop)
 from repro.core.pst import (AppManager, ExecutionProfile, PipelineSpec,
                             Stage, TaskSpec)

@@ -45,6 +45,14 @@ def kernel_names() -> List[str]:
     return sorted(_KERNEL_REGISTRY)
 
 
+def kernel_registered(name: str) -> bool:
+    """True when a plugin registered under ``name`` — the static check
+    behind diagnostic E107 (repro.analysis), usable without constructing
+    a Kernel (which raises KeyError on miss)."""
+    _ensure_plugins()
+    return name in _KERNEL_REGISTRY
+
+
 def _ensure_plugins():
     import repro.plugins  # noqa: F401  (registers the standard plugins)
 
@@ -69,6 +77,10 @@ class Kernel:
         # model this kernel's output traffic in DES mode, where no real
         # payload exists to measure
         self.output_nbytes: Optional[int] = None
+        # declared result type: lets the static validator (repro.analysis)
+        # check this kernel's puts against a typed Channel's dtype BEFORE
+        # the run (diagnostic E101); runtime puts are still checked live
+        self.output_dtype: Optional[type] = None
         self.timings = {"data_in": 0.0, "data_out": 0.0, "exec": 0.0}
 
     # ------------------------------------------------------------ execute

@@ -14,7 +14,7 @@ repro/core/__init__.py).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 from repro.core.kernel_plugin import Kernel
 

@@ -110,6 +110,11 @@ class ExecutionProfile:
 class TaskSpec:
     """Kernel + slots + metadata (+ ports): what to run, how wide, labels.
 
+    ``kernel`` is a :class:`Kernel` or a plugin name string; a string is
+    resolved at submit time and an unknown name is rejected with
+    diagnostic E107 (carrying the pipeline/stage/task location) before
+    any task of the stage launches.
+
     ``name`` (optional) becomes the runtime task name verbatim — callers
     providing names are responsible for global uniqueness; unnamed specs get
     ``<pipeline>.<stage_idx>.<stage>.<index>`` (unique even when adaptive
@@ -132,7 +137,7 @@ class TaskSpec:
     ``ctx["staged_inputs"]``; every move is charged to ``t_data``.
     Without staging the kernel handles its own lists, exactly as before.
     """
-    kernel: Kernel
+    kernel: Union[Kernel, str]
     name: str = ""
     metadata: Dict[str, Any] = field(default_factory=dict)
     inputs: Any = None
@@ -141,6 +146,11 @@ class TaskSpec:
     stage_out: Any = None
 
     def __post_init__(self):
+        if isinstance(self.kernel, str):
+            # named-kernel spec: resolved to a Kernel (and the staging
+            # defaults below applied) at submit time, where an unknown
+            # name is rejected with diagnostic E107
+            return
         if self.stage_in is None:
             self.stage_in = self.kernel.upload_input_data
         if self.stage_out is None:
@@ -609,7 +619,8 @@ class AppManager:
         self.runtime.journal.record_flow(
             "channel_put", ch.name, pk, value=journal_value,
             digest=value.digest if is_ref else None,
-            nbytes=value.nbytes if is_ref else None)
+            nbytes=value.nbytes if is_ref else None,
+            mode=ch.mode)
         self._wake(("channel", ch.name))
 
     def _emit_outputs(self, stage: Stage, pr: _PipelineRun, idx: int):
@@ -660,6 +671,32 @@ class AppManager:
                     self._submit_next_stage(pr, dynamic=True)
 
     # ------------------------------------------------------------ advance
+    def _resolve_kernels(self, stage: Stage, pr: _PipelineRun, idx: int):
+        """Resolve named-kernel specs (``TaskSpec(kernel="...")``) to
+        Kernel instances, applying the staging defaults the dataclass
+        deferred; an unknown name raises E107 with its full pipeline/
+        stage/task location — at submit time, before any task of the
+        stage (or of a stage parked behind it) launches."""
+        from repro.core.kernel_plugin import kernel_registered
+        for j, spec in enumerate(stage.tasks):
+            if not isinstance(spec.kernel, str):
+                continue
+            kname = spec.kernel
+            if not kernel_registered(kname):
+                from repro.analysis.diagnostics import (Diagnostic,
+                                                        DiagnosticError)
+                raise DiagnosticError([Diagnostic(
+                    "E107",
+                    f"kernel {kname!r} matches no registered plugin "
+                    "(kernel_names() lists the registry)",
+                    pipeline=pr.name, stage=idx,
+                    task=spec.name or f"{stage.name or idx}[{j}]")])
+            spec.kernel = Kernel(kname)
+            if spec.stage_in is None:
+                spec.stage_in = spec.kernel.upload_input_data
+            if spec.stage_out is None:
+                spec.stage_out = spec.kernel.download_output_data
+
     def _submit_next_stage(self, pr: _PipelineRun, *, dynamic: bool):
         self._advance_depth += 1
         try:
@@ -679,6 +716,7 @@ class AppManager:
                 pr.state = "done"
                 return
             stage = pr.spec.stages[nxt]
+            self._resolve_kernels(stage, pr, nxt)
             if self.staging is None and (stage.stage_in or stage.stage_out):
                 # stage-level declarations have no kernel-side fallback
                 # (unlike TaskSpec's, which default FROM the kernel's own
@@ -810,14 +848,39 @@ class AppManager:
                 "n_pod_lost": n_pod_lost}
 
     # ------------------------------------------------------------ run
-    def run(self, pipelines: Union[PipelineSpec, Iterable[PipelineSpec]]
-            ) -> ExecutionProfile:
+    def run(self, pipelines: Union[PipelineSpec, Iterable[PipelineSpec]],
+            *, validate: str = "warn") -> ExecutionProfile:
         """Execute the pipelines to completion; returns the aggregate
-        profile (cumulative if a profile was passed in)."""
+        profile (cumulative if a profile was passed in).
+
+        ``validate`` gates the pre-flight linter (repro.analysis) run over
+        the declared specs BEFORE any task launches: ``"error"`` raises
+        :class:`~repro.analysis.diagnostics.DiagnosticError` on any E-code
+        finding (nothing is submitted), ``"warn"`` (default) prints a
+        one-line summary to stderr and proceeds, ``"off"`` skips the pass.
+        The full report lands in ``profile.results["diagnostics"]``."""
+        if validate not in ("error", "warn", "off"):
+            raise ValueError(f"validate={validate!r}: "
+                             "expected 'error', 'warn' or 'off'")
         pipes = ([pipelines] if isinstance(pipelines, PipelineSpec)
                  else list(pipelines))
-        t0 = time.perf_counter()
         prof = self.profile
+        if validate != "off":
+            from repro.analysis.validate import validate_app
+            report = validate_app(
+                pipes, runtime=self.runtime, channels=dict(self.channels),
+                existing_pipelines=list(self.pipeline_runs))
+            prof.results["diagnostics"] = [str(d) for d in
+                                           report.diagnostics]
+            if validate == "error":
+                report.raise_if_errors()
+            elif not report.ok:
+                import sys
+                print(f"repro.analysis: {len(report.errors)} error(s), "
+                      f"{len(report.warnings)} warning(s) in submitted "
+                      "pipelines (validate='warn'; see "
+                      "profile.results['diagnostics'])", file=sys.stderr)
+        t0 = time.perf_counter()
         runs = []
         for p in pipes:
             name = p.name or f"p{len(self.pipeline_runs):04d}"

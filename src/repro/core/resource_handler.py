@@ -9,8 +9,8 @@ application-level scheduling (the whole point of the pilot abstraction).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional
+from dataclasses import dataclass
+from typing import Dict, Optional
 
 import jax
 

@@ -79,6 +79,25 @@ def abstract_mesh(shape: Sequence[int], axes: Sequence[str]) -> AbstractMesh:
         return AbstractMesh(tuple(zip(axes, shape)))    # jax 0.4.x signature
 
 
+def shardable_recarve_counts(topology) -> List[int]:
+    """Slot counts reachable by ``SlotTopology.recarve`` that keep the
+    sharding contract intact.
+
+    ``recarve`` grows by splitting the FIRST slot axis.  When that axis is
+    the tensor-parallel ``model`` axis, any split would change the axis
+    size every weight matrix was sharded against — existing ``tp``/``fsdp``
+    placements become invalid mid-run — so only the current count
+    survives.  Splitting a data axis (``data``/``pod``/``slot``) only
+    narrows batch parallelism, which the divisibility-fallback rule
+    already tolerates, so every topologically reachable count is fine.
+    The static validator (repro.analysis, E108) checks cores requests
+    against THIS list, not the raw topological one."""
+    counts = topology.reachable_slot_counts()
+    if topology.axis_names and topology.axis_names[0] == MODEL_AXIS:
+        return [topology.n_slots]
+    return counts
+
+
 def mesh_axis_sizes(mesh) -> Dict[str, int]:
     """{axis name: size} for Mesh and AbstractMesh alike."""
     try:

@@ -101,6 +101,19 @@ class SlotTopology:
                             axis_names=self.axis_names)
 
     # ------------------------------------------------------------ queries
+    def reachable_slot_counts(self) -> list:
+        """Every slot count some chain of grow-only :meth:`recarve` calls
+        can reach from here: ``n_slots * f`` for each ``f`` dividing the
+        first slot axis (splitting is single-axis, so composed recarves
+        reach exactly the divisors).  Sorted ascending; the static
+        validator (repro.analysis, E108/W202) uses this to decide whether
+        a cores request can EVER be granted."""
+        if self.devices.ndim < 2:
+            return [self.n_slots]
+        width = int(self.devices.shape[1])
+        return sorted(self.n_slots * f for f in range(1, width + 1)
+                      if width % f == 0)
+
     @property
     def n_slots(self) -> int:
         return int(self.devices.shape[0])

@@ -6,7 +6,6 @@ the CUDA mamba kernel's SRAM blocking, restated for XLA/HBM).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

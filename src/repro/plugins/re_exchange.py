@@ -23,12 +23,10 @@ the swap decision did NOT cost; a ref-valued ``loss`` is dereferenced via
 from __future__ import annotations
 
 import math
-from typing import Any, Dict
 
 import numpy as np
 
 from repro.core.kernel_plugin import register_kernel
-from repro.plugins.lm import STATE_STORE
 from repro.staging.ports import iter_refs
 from repro.staging.store import StagedRef
 

@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import os
 import tempfile
-from collections import Counter
 
 import numpy as np
 

@@ -76,6 +76,14 @@ from repro.runtime.journal import Journal
 from repro.runtime.states import Task, TaskGraph, TaskState
 
 
+def _staged_extra(t: Task) -> Dict[str, Any]:
+    """``scheduled``-record annotation: the staged-input digests this
+    attempt holds, so the sanitizer's S303 check can pair every hold
+    with its eventual ``staged_release``."""
+    digs = [ref.digest for _kind, _key, ref in t.meta.get("staged_refs", ())]
+    return {"staged": digs} if digs else {}
+
+
 @dataclass
 class RuntimeProfile:
     """TTC decomposition (paper eq. 1-2)."""
@@ -107,6 +115,7 @@ class PilotRuntime:
                  max_retries: int = 2,
                  straggler_factor: float = 0.0,
                  min_straggler_samples: int = 5,
+                 sanitize: bool = False,
                  on_schedule: Optional[Callable] = None):
         assert mode in ("real", "sim")
         if slots is None:
@@ -136,6 +145,17 @@ class PilotRuntime:
         if staging is not None:
             staging.bind_runtime(self)
         self.journal = journal or Journal(None)
+        # live invariant checking (repro.analysis): every record the
+        # journal emits ALSO flows through the sanitizer, which raises
+        # DiagnosticError at the exact record that breaks an invariant.
+        # Priming digests a pre-existing journal so prior segments' puts
+        # and epochs are known (else every replayed take looks unbound).
+        self.sanitizer = None
+        if sanitize:
+            from repro.analysis.sanitizer import JournalSanitizer
+            self.sanitizer = JournalSanitizer(strict=True)
+            self.sanitizer.prime(self.journal.path)
+            self.journal.observer = self.sanitizer.observe
         self.faults = faults
         self.detector = FailureDetector(heartbeat_timeout) \
             if heartbeat_timeout is not None else None
@@ -327,9 +347,13 @@ class PilotRuntime:
         return self.staging.stage_in(t, self.mode)
 
     def _staging_finish(self, t: Task):
-        """Terminal-state hook: release the task's staged-blob holds."""
+        """Terminal-state hook: release the task's staged-blob holds.
+        The release is journaled (once, the finish() guard dedupes) so the
+        sanitizer's S303 balance check can audit it post-hoc."""
         if self.staging is not None:
-            self.staging.finish(t)
+            released = self.staging.finish(t)
+            if released:
+                self.journal.record(t, "staged_release", digests=released)
 
     def _release_slots(self, t: Task):
         """Return t's slot ids exactly once (supersession may race a pop);
@@ -427,6 +451,11 @@ class RuntimeSession:
         # journal replay set, loaded once per session
         self._replayed_done, self._replayed_results, \
             self._replayed_history = runtime.journal.load_state()
+        # segment marker: epoch/attempt invariants reset here (a restart
+        # legitimately re-runs tasks from attempt one), and replay parsers
+        # skip it (no "task" key)
+        runtime.journal.record_event("session_start", mode=runtime.mode,
+                                     slots=runtime.slots)
 
     @property
     def busy_slots(self) -> int:
@@ -596,13 +625,15 @@ class RuntimeSession:
         # staged-input transfers execute here — between pop_ready and
         # launch — and extend the task's occupancy on the virtual clock
         t_data = rt._stage_in_task(t)
+        t.meta["t_data_attempt"] = t_data   # this attempt's staged seconds
         t.attempts += 1
         t.error = None                 # a retry must not inherit the
         t.state = TaskState.RUNNING    # previous attempt's error
         t.t_scheduled = time.perf_counter()
         t.v_started = self.vnow
         t.meta["launch_epoch"] = t.attempts
-        rt.journal.record(t, "scheduled", pod=rt._task_pod(t))
+        rt.journal.record(t, "scheduled", pod=rt._task_pod(t),
+                          **_staged_extra(t))
         heapq.heappush(self._heap,
                        (self.vnow + max(t.duration, 0.0) + t_data,
                         self._seq, t.attempts, t))
@@ -644,7 +675,12 @@ class RuntimeSession:
         prof.t_data += t.t_data
         prof.slot_busy += t.duration * t.slots
         self._durations.setdefault(t.stage, []).append(t.duration)
-        rt.journal.record(t, "finished")
+        # timing fields feed the sanitizer's S306 disjointness check: on
+        # the virtual clock, the attempt's interval is EXACTLY its exec
+        # time plus its staged-transfer time
+        rt.journal.record(t, "finished", t_exec=max(t.duration, 0.0),
+                          t_data=t.meta.get("t_data_attempt", 0.0),
+                          v_started=t.v_started, v_finished=t.v_finished)
         rt._staging_finish(t)
         if t.speculative_of:
             # the duplicate won: complete the straggling original
@@ -870,13 +906,15 @@ class RuntimeSession:
                         rt.staging.clone_manifest(t, dup)
                     rt._acquire_slots(dup)
                     t_data = rt._stage_in_task(dup)
+                    dup.meta["t_data_attempt"] = t_data
                     heapq.heappush(
                         self._heap,
                         (dup.v_started + med + t_data,
                          self._seq, dup.attempts, dup))
                     self._seq += 1
                     rt.journal.record(dup, "scheduled", speculative=True,
-                                      pod=rt._task_pod(dup))
+                                      pod=rt._task_pod(dup),
+                                      **_staged_extra(dup))
                     self._spec_launched[t.name] = dup
 
     # ------------------------------------------------------------ real mode
@@ -1026,9 +1064,13 @@ class RuntimeSession:
                 prof.n_retries += 1
                 t.meta.pop("slot_ids", None)
                 t.meta.pop("slots_released", None)
+            # wall/t_exec/t_data_kernel feed the sanitizer's S306 check:
+            # in-kernel deref seconds must come OUT of the exec window
             rt.journal.record(
                 t, "finished" if t.state == TaskState.DONE else "failed",
-                pod=pod)
+                pod=pod, t_exec=span,
+                t_data_kernel=t.meta.get("t_data_kernel", 0.0),
+                wall=max(t.t_finished - t.t_started, 0.0))
             if t.state.terminal:
                 # cumulative across attempts, charged once at the end
                 prof.t_data += t.t_data
@@ -1105,7 +1147,8 @@ class RuntimeSession:
                     t.state = TaskState.RUNNING
                     t.t_scheduled = time.perf_counter()
                     t.meta["launch_epoch"] = t.attempts
-                    rt.journal.record(t, "scheduled", pod=rt._task_pod(t))
+                    rt.journal.record(t, "scheduled", pod=rt._task_pod(t),
+                                      **_staged_extra(t))
                     self._inflight += 1
                     th = threading.Thread(target=self._execute_real,
                                           args=(t,), daemon=True)

@@ -15,7 +15,20 @@ from typing import Dict, Optional
 from repro.runtime.states import TaskGraph, TaskState
 
 
+def journal_from_env(name: str) -> "Journal":
+    """Journal writing ``$REPRO_JOURNAL_DIR/<name>.jsonl``, or a no-op
+    journal when the env var is unset — lets smoke runs opt into journal
+    capture (CI sanitizes the captured files) without new CLI flags."""
+    base = os.environ.get("REPRO_JOURNAL_DIR")
+    return Journal(os.path.join(base, f"{name}.jsonl") if base else None)
+
+
 class Journal:
+    #: optional callable(rec: dict) invoked for every record written —
+    #: the live-sanitizer hook (analysis.JournalSanitizer.observe).  Also
+    #: fires when ``path`` is None, so in-memory runs can be checked.
+    observer = None
+
     def __init__(self, path: Optional[str]):
         self.path = path
         self._fh = None
@@ -31,8 +44,14 @@ class Journal:
                     if probe.read(1) != b"\n":
                         self._fh.write("\n")
 
+    def _emit(self, rec: dict):
+        if self._fh is not None:
+            self._fh.write(json.dumps(rec, default=str) + "\n")
+        if self.observer is not None:
+            self.observer(rec)
+
     def record(self, task, event: str, **extra):
-        if self._fh is None:
+        if self._fh is None and self.observer is None:
             return
         rec = {"t": time.time(), "task": task.name, "event": event,
                "state": task.state.value, "attempts": task.attempts}
@@ -45,20 +64,23 @@ class Journal:
             except (TypeError, ValueError):
                 pass             # non-JSON results replay as None
         rec.update(extra)
-        self._fh.write(json.dumps(rec, default=str) + "\n")
+        self._emit(rec)
+        return rec
 
     def record_event(self, event: str, **extra):
-        """Run-level (taskless) record: pod_lost, pod_revived, topology
-        compaction.  Replay parsers that key on ``task`` skip these."""
-        if self._fh is None:
+        """Run-level (taskless) record: session_start, pod_lost,
+        pod_revived, topology compaction.  Replay parsers that key on
+        ``task`` skip these."""
+        if self._fh is None and self.observer is None:
             return
         rec = {"t": time.time(), "event": event, **extra}
-        self._fh.write(json.dumps(rec, default=str) + "\n")
+        self._emit(rec)
 
     def record_flow(self, event: str, channel: str, producer: str,
                     value=None, consumer: Optional[str] = None,
                     digest: Optional[str] = None,
-                    nbytes: Optional[int] = None):
+                    nbytes: Optional[int] = None,
+                    mode: Optional[str] = None):
         """Persist a data-flow event (core.flow): ``channel_put`` carries
         the put value (when JSON-serializable), ``channel_take`` the
         consumer->producer binding.  Replay uses these so coupled pipelines
@@ -68,12 +90,14 @@ class Journal:
         value AND carry ``digest``/``nbytes`` explicitly, so a coupled
         restart re-binds consumers to the content-addressed blob (spill
         file) without re-staging the payload."""
-        if self._fh is None:
+        if self._fh is None and self.observer is None:
             return
         rec = {"t": time.time(), "event": event, "channel": channel,
                "producer": producer}
         if consumer is not None:
             rec["consumer"] = consumer
+        if mode is not None:
+            rec["mode"] = mode
         if digest is not None:
             rec["digest"] = digest
             if nbytes is not None:
@@ -89,7 +113,7 @@ class Journal:
                     rec["value"] = value
             except (TypeError, ValueError):
                 pass
-        self._fh.write(json.dumps(rec, default=str) + "\n")
+        self._emit(rec)
 
     def close(self):
         if self._fh:

@@ -5,10 +5,9 @@ serving example and the ensemble serving plugins.
 from __future__ import annotations
 
 import collections
-import itertools
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp

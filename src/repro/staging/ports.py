@@ -317,16 +317,19 @@ class StagingLayer:
         retried task keeps its refs until its FINAL attempt ends), and
         drop the decoded payloads pinned on the task — otherwise every
         consumer task would keep its inputs resident for the whole run,
-        defeating the byte budget."""
+        defeating the byte budget.  Returns the released digests (empty
+        when this call was a no-op) so the executor can journal the
+        release — the sanitizer's S303 balance check audits it."""
         entries = task.meta.get("staged_refs")
         if not entries or task.meta.get("staging_released"):
-            return
+            return []
         task.meta["staging_released"] = True
         task.meta.pop("staged_values", None)
         task.meta.pop("staged_in_values", None)
         with self._lock:
             for _kind, _key, ref in entries:
                 self.store.release(ref)
+        return [ref.digest for _kind, _key, ref in entries]
 
     # ------------------------------------------------------------ placement
     def _ref_pods(self, task) -> set:

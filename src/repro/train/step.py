@@ -4,7 +4,7 @@ microbatching (lax.scan), global-norm clipping, AdamW, LR schedules.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

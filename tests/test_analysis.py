@@ -1,0 +1,608 @@
+"""repro.analysis: static pre-flight validator + journal sanitizer.
+
+Covers every diagnostic code in ``diagnostics.CODES`` with one triggering
+fixture AND a clean twin (the nearby spec that must NOT trigger it), the
+AppManager/PilotRuntime wiring (``validate=``, ``sanitize=True``), the CLI,
+and a property test: any randomly generated pipeline set the validator
+accepts must complete in sim mode without deadlock (and any set that
+deadlocks must have been rejected).
+"""
+import json
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.analysis import (CODES, DiagnosticError, JournalSanitizer,
+                            sanitize_file, validate_app)
+from repro.analysis.__main__ import main as analysis_cli
+from repro.core import AppManager, Channel, Kernel, PipelineSpec, Stage, \
+    TaskSpec
+from repro.dist.topology import SlotTopology
+from repro.runtime.executor import PilotRuntime
+from repro.runtime.journal import Journal, journal_from_env
+from repro.staging import LocalityMap, StagingLayer
+
+
+def _noop(duration=0.01, **attrs):
+    k = Kernel("synthetic.noop")
+    k.sim_duration = duration
+    for name, v in attrs.items():
+        setattr(k, name, v)
+    return k
+
+
+def _chain(name="p", n_stages=1, outputs=None, inputs=None):
+    return PipelineSpec(
+        [Stage([TaskSpec(_noop())], name=f"s{i}",
+               outputs=outputs, inputs=inputs)
+         for i in range(n_stages)], name=name)
+
+
+# ===================================================== validator: E codes
+
+def test_clean_app_has_no_findings():
+    ch = Channel("t1")
+    prod = _chain("prod", 2, outputs=[ch])
+    cons = _chain("cons", 2, inputs={"x": ch})
+    report = validate_app([prod, cons])
+    assert report.ok and not report.diagnostics
+
+
+def test_single_pipelinespec_accepted():
+    assert validate_app(_chain()).ok
+
+
+def test_e101_port_type_mismatch():
+    ch = Channel("typed", dtype=int)
+    bad = PipelineSpec([Stage([TaskSpec(_noop(output_dtype=str))],
+                              name="s0", outputs=[ch])], name="p")
+    assert "E101" in validate_app([bad]).codes()
+    ok = PipelineSpec([Stage([TaskSpec(_noop(output_dtype=bool))],
+                             name="s0", outputs=[Channel("typed2",
+                                                         dtype=int)])],
+                      name="p")
+    assert "E101" not in validate_app([ok]).codes()  # bool <: int
+
+
+def test_e101_task_level_output():
+    ch = Channel("typed3", dtype=int)
+    bad = PipelineSpec(
+        [Stage([TaskSpec(_noop(output_dtype=str), outputs=[ch])],
+               name="s0")], name="p")
+    assert "E101" in validate_app([bad]).codes()
+
+
+def test_e102_channel_without_producer():
+    orphan = Channel("orphan")
+    report = validate_app([_chain("c", inputs={"x": orphan})])
+    assert report.codes() == ["E102"]
+    # clean twin: the same shape with a producer
+    ch = Channel("fed")
+    report = validate_app([_chain("p", outputs=[ch]),
+                           _chain("c", inputs={"x": ch})])
+    assert "E102" not in report.codes()
+
+
+def test_e102_preseeded_channel_is_fine():
+    ch = Channel("seeded")
+    ch.put("warm", 1)
+    assert validate_app([_chain("c", inputs={"x": ch})],
+                        channels={"seeded": ch}).ok
+
+
+def test_e103_future_of_unknown_stage():
+    orphan = Stage([TaskSpec(_noop())], name="elsewhere")
+    report = validate_app([_chain("c", inputs={"x": orphan.future()})])
+    assert "E103" in report.codes()
+    # clean twin: a future of a stage in a submitted sibling pipeline
+    prod = _chain("prod")
+    cons = _chain("cons", inputs={"x": prod.stages[0].future()})
+    assert validate_app([prod, cons]).ok
+
+
+def test_e104_ensemble_cycle():
+    a, b = Channel("a2b"), Channel("b2a")
+    pa = PipelineSpec([Stage([TaskSpec(_noop())], name="s0",
+                             inputs={"x": b}, outputs=[a])], name="A")
+    pb = PipelineSpec([Stage([TaskSpec(_noop())], name="s0",
+                             inputs={"x": a}, outputs=[b])], name="B")
+    codes = validate_app([pa, pb]).codes()
+    assert "E104" in codes and "E106" not in codes
+
+
+def test_e105_starved_consumer():
+    ch = Channel("short")
+    prod = _chain("prod", 1, outputs=[ch])          # one put
+    cons = _chain("cons", 3, inputs={"x": ch})      # needs three
+    report = validate_app([prod, cons])
+    assert "E105" in report.codes()
+    assert validate_app([_chain("prod", 3, outputs=[ch]),
+                         _chain("cons", 3, inputs={"x": ch})]).ok
+
+
+def test_e106_wedged_producer_no_consumer():
+    ch = Channel("narrow", capacity=1)
+    prod = _chain("prod", 2, outputs=[ch])
+    codes = validate_app([prod]).codes()
+    assert "E106" in codes
+    # clean twin: a consumer that drains between puts
+    ch2 = Channel("drained", capacity=1)
+    report = validate_app([_chain("prod", 2, outputs=[ch2]),
+                           _chain("cons", 2, inputs={"x": ch2})])
+    assert report.ok
+
+
+def test_e106_capacity_deadlock_cycle():
+    data = Channel("data", capacity=1)
+    gate = Channel("gate")
+    prod = PipelineSpec(
+        [Stage([TaskSpec(_noop())], name="p0", outputs=[data]),
+         Stage([TaskSpec(_noop())], name="p1", outputs=[data]),
+         Stage([TaskSpec(_noop())], name="p2", outputs=[gate])], name="P")
+    cons = PipelineSpec(
+        [Stage([TaskSpec(_noop())], name="c0",
+               inputs={"g": gate, "d": data})], name="C")
+    report = validate_app([prod, cons])
+    assert "E106" in report.codes()
+    # only the root cause is reported, not one finding per parked pipeline
+    assert len(report.errors) == 1
+
+
+def test_e107_unknown_kernel_name():
+    bad = PipelineSpec([Stage([TaskSpec("no.such.kernel")], name="s0")],
+                       name="p")
+    report = validate_app([bad])
+    assert "E107" in report.codes()
+    d = next(d for d in report.diagnostics if d.code == "E107")
+    assert d.pipeline == "p" and d.stage == 0
+    ok = PipelineSpec([Stage([TaskSpec("synthetic.noop")], name="s0")],
+                      name="p")
+    assert "E107" not in validate_app([ok]).codes()
+
+
+def test_e108_slots_unsatisfiable_vs_w202_recarve():
+    topo = SlotTopology.even(range(8), 2, axis_names=("data",))
+    rt = PilotRuntime(topology=topo, mode="sim")   # 2 slots, growable to 8
+    too_wide = _chain("p")
+    too_wide.stages[0].tasks[0].kernel.cores = 16
+    assert "E108" in validate_app([too_wide], runtime=rt).codes()
+    growable = _chain("p")
+    growable.stages[0].tasks[0].kernel.cores = 8
+    codes = validate_app([growable], runtime=rt).codes()
+    assert "W202" in codes and "E108" not in codes
+
+
+def test_e108_sharding_blocks_model_axis_split():
+    # splitting the leading "model" axis would invalidate tp placements,
+    # so the only reachable width is the current 2 slots
+    topo = SlotTopology.even(range(8), 2, axis_names=("model",))
+    rt = PilotRuntime(topology=topo, mode="sim")
+    p = _chain("p")
+    p.stages[0].tasks[0].kernel.cores = 4
+    assert "E108" in validate_app([p], runtime=rt).codes()
+
+
+def test_e109_staging_overflow_vs_w204_spill(tmp_path):
+    def run_with(spill_dir):
+        staging = StagingLayer(locality=LocalityMap(2, slots_per_pod=1),
+                               threshold_bytes=1, byte_budget=100,
+                               spill_dir=spill_dir)
+        rt = PilotRuntime(slots=2, mode="real", staging=staging)
+        p = _chain("p")
+        p.stages[0].tasks[0].kernel.output_nbytes = 1000
+        return validate_app([p], runtime=rt).codes()
+
+    assert "E109" in run_with(None)
+    codes = run_with(str(tmp_path / "spill"))
+    assert "W204" in codes and "E109" not in codes
+
+
+def test_e109_not_raised_in_sim_mode():
+    staging = StagingLayer(locality=LocalityMap(2, slots_per_pod=1),
+                           threshold_bytes=1, byte_budget=100)
+    rt = PilotRuntime(slots=2, mode="sim", staging=staging)
+    p = _chain("p")
+    p.stages[0].tasks[0].kernel.output_nbytes = 1000
+    assert validate_app([p], runtime=rt).ok    # virtual blobs: no memory
+
+
+def test_e110_two_channels_one_name():
+    report = validate_app([_chain("p", outputs=[Channel("same")]),
+                           _chain("c", inputs={"x": Channel("same")})])
+    assert "E110" in report.codes()
+    shared = Channel("same2")
+    assert "E110" not in validate_app(
+        [_chain("p", outputs=[shared]),
+         _chain("c", inputs={"x": shared})]).codes()
+
+
+def test_e111_duplicate_pipeline_name():
+    assert "E111" in validate_app([_chain("twin"),
+                                   _chain("twin")]).codes()
+    assert "E111" in validate_app([_chain("prior")],
+                                  existing_pipelines=["prior"]).codes()
+    assert validate_app([_chain("one"), _chain("two")]).ok
+
+
+def test_e112_duplicate_task_names():
+    p = PipelineSpec([Stage([TaskSpec(_noop(), name="dup"),
+                             TaskSpec(_noop(), name="dup")],
+                            name="s0")], name="p")
+    assert "E112" in validate_app([p]).codes()
+    q = PipelineSpec([Stage([TaskSpec(_noop(), name="t0"),
+                             TaskSpec(_noop(), name="t1")],
+                            name="s0")], name="p")
+    assert validate_app([q]).ok
+
+
+def test_e113_malformed_ports():
+    p = PipelineSpec([Stage([TaskSpec(_noop())], name="s0", inputs=42)],
+                     name="p")
+    report = validate_app([p])
+    assert "E113" in report.codes()
+    q = PipelineSpec([Stage([TaskSpec(_noop())], name="s0",
+                            inputs={"x": "not-a-channel"})], name="p")
+    assert "E113" in validate_app([q]).codes()
+
+
+# ===================================================== validator: W codes
+
+def test_w201_unconsumed_fifo_channel():
+    report = validate_app([_chain("p", outputs=[Channel("drop")])])
+    assert report.codes() == ["W201"] and report.ok
+    # broadcast channels legitimately outlive any declared consumer set
+    report = validate_app(
+        [_chain("p", outputs=[Channel("bc", mode="broadcast")])])
+    assert "W201" not in report.codes()
+
+
+def test_w202_wider_than_abstract_pilot():
+    rt = PilotRuntime(slots=2, mode="sim")
+    p = _chain("p")
+    p.stages[0].tasks[0].kernel.cores = 4
+    codes = validate_app([p], runtime=rt).codes()
+    assert "W202" in codes and "E108" not in codes     # resize can grant it
+    assert validate_app([_chain("p")], runtime=rt).ok
+
+
+def test_w203_retries_exceed_pods():
+    staging = StagingLayer(locality=LocalityMap(4, slots_per_pod=2))
+    rt = PilotRuntime(slots=4, mode="sim", staging=staging, max_retries=5)
+    assert "W203" in validate_app([_chain("p")], runtime=rt).codes()
+    rt2 = PilotRuntime(slots=4, mode="sim",
+                       staging=StagingLayer(
+                           locality=LocalityMap(4, slots_per_pod=2)),
+                       max_retries=1)
+    assert "W203" not in validate_app([_chain("p")], runtime=rt2).codes()
+
+
+def test_w203_skipped_without_pod_tracking():
+    rt = PilotRuntime(slots=2, mode="sim", max_retries=9)
+    assert "W203" not in validate_app([_chain("p")], runtime=rt).codes()
+
+
+# ===================================================== sanitizer: S codes
+
+def _scheduled(task="t", attempts=1, **kw):
+    return {"event": "scheduled", "task": task, "attempts": attempts, **kw}
+
+
+def _finished(task="t", attempts=1, **kw):
+    return {"event": "finished", "task": task, "state": "DONE",
+            "attempts": attempts, **kw}
+
+
+def test_s301_epoch_regression():
+    san = JournalSanitizer()
+    san.observe(_scheduled(attempts=2))
+    san.observe(_scheduled(attempts=2))
+    assert san.report.codes() == ["S301"]
+    clean = JournalSanitizer()
+    clean.observe(_scheduled(attempts=1))
+    clean.observe(_scheduled(attempts=2))
+    assert clean.finalize().ok
+
+
+def test_s301_segment_reset_allows_fresh_epochs():
+    san = JournalSanitizer()
+    san.observe(_scheduled(attempts=2))
+    san.observe({"event": "session_start"})     # restart: epochs reset
+    san.observe(_scheduled(attempts=1))
+    assert san.finalize().ok
+
+
+def test_s302_zombie_clobber():
+    san = JournalSanitizer()
+    san.observe(_scheduled(attempts=1))
+    san.observe({"event": "pod_lost", "task": "t", "attempts": 1})
+    san.observe(_finished(attempts=1))
+    assert "S302" in san.report.codes()
+    clean = JournalSanitizer()
+    clean.observe(_scheduled(attempts=1))
+    clean.observe({"event": "pod_lost", "task": "t", "attempts": 1})
+    clean.observe(_scheduled(attempts=2))
+    clean.observe(_finished(attempts=2))        # the RETRY finished: fine
+    assert clean.finalize().ok
+
+
+def test_s302_speculative_supersession_is_legal():
+    san = JournalSanitizer()
+    san.observe(_scheduled(attempts=1))
+    san.observe({"event": "canceled", "task": "t", "attempts": 1})
+    san.observe(_finished(attempts=1, by="speculative"))
+    assert san.finalize().ok
+
+
+def test_s303_double_release():
+    san = JournalSanitizer()
+    san.observe(_scheduled(staged=["d1"]))
+    san.observe({"event": "staged_release", "task": "t", "digests": ["d1"]})
+    san.observe({"event": "staged_release", "task": "t", "digests": ["d1"]})
+    assert "S303" in san.report.codes()
+
+
+def test_s303_missing_release_found_at_finalize():
+    san = JournalSanitizer()
+    san.observe(_scheduled(staged=["d1"]))
+    san.observe(_finished())
+    assert san.report.ok                 # terminal record comes FIRST...
+    assert "S303" in san.finalize().codes()   # ...closure is post-hoc
+    clean = JournalSanitizer()
+    clean.observe(_scheduled(staged=["d1"]))
+    clean.observe(_finished())
+    clean.observe({"event": "staged_release", "task": "t",
+                   "digests": ["d1"]})
+    assert clean.finalize().ok
+
+
+def test_s304_take_without_put():
+    san = JournalSanitizer()
+    san.observe({"event": "channel_take", "channel": "c",
+                 "producer": "ghost", "consumer": "x"})
+    assert "S304" in san.report.codes()
+
+
+def test_s304_fifo_double_consume():
+    san = JournalSanitizer()
+    san.observe({"event": "channel_put", "channel": "c", "producer": "p0",
+                 "mode": "fifo"})
+    san.observe({"event": "channel_take", "channel": "c", "producer": "p0",
+                 "consumer": "a"})
+    san.observe({"event": "channel_take", "channel": "c", "producer": "p0",
+                 "consumer": "b"})
+    assert "S304" in san.report.codes()
+    # broadcast fan-out of one put to N consumers is the designed behavior
+    bc = JournalSanitizer()
+    bc.observe({"event": "channel_put", "channel": "c", "producer": "p0",
+                "mode": "broadcast"})
+    bc.observe({"event": "channel_take", "channel": "c", "producer": "p0",
+                "consumer": "a"})
+    bc.observe({"event": "channel_take", "channel": "c", "producer": "p0",
+                "consumer": "b"})
+    assert bc.finalize().ok
+    # replayed take of the SAME consumer (restart) is also legal
+    rp = JournalSanitizer()
+    rp.observe({"event": "channel_put", "channel": "c", "producer": "p0",
+                "mode": "fifo"})
+    rp.observe({"event": "channel_take", "channel": "c", "producer": "p0",
+                "consumer": "a"})
+    rp.observe({"event": "channel_take", "channel": "c", "producer": "p0",
+                "consumer": "a"})
+    assert rp.finalize().ok
+
+
+def test_s305_attempt_gap():
+    san = JournalSanitizer()
+    san.observe(_scheduled(attempts=1))
+    san.observe(_scheduled(attempts=3))
+    assert "S305" in san.report.codes()
+
+
+def test_s306_sim_interval_mismatch():
+    san = JournalSanitizer()
+    san.observe(_scheduled())
+    san.observe(_finished(t_exec=2.0, t_data=0.0,
+                          v_started=0.0, v_finished=1.0))
+    assert "S306" in san.report.codes()
+    clean = JournalSanitizer()
+    clean.observe(_scheduled())
+    clean.observe(_finished(t_exec=1.5, t_data=0.5,
+                            v_started=0.0, v_finished=2.0))
+    assert clean.finalize().ok
+
+
+def test_s306_real_exec_data_overlap():
+    san = JournalSanitizer()
+    san.observe(_scheduled())
+    san.observe(_finished(t_exec=2.0, t_data_kernel=0.5, wall=1.0))
+    assert "S306" in san.report.codes()
+    clean = JournalSanitizer()
+    clean.observe(_scheduled())
+    clean.observe(_finished(t_exec=0.6, t_data_kernel=0.3, wall=1.0))
+    assert clean.finalize().ok
+
+
+def test_sanitizer_strict_raises_at_violation():
+    san = JournalSanitizer(strict=True)
+    san.observe(_scheduled(attempts=2))
+    with pytest.raises(DiagnosticError) as ei:
+        san.observe(_scheduled(attempts=2))
+    assert ei.value.diagnostics[0].code == "S301"
+
+
+def test_sanitize_file_skips_torn_lines(tmp_path):
+    path = tmp_path / "j.jsonl"
+    path.write_text(json.dumps(_scheduled()) + "\n"
+                    + json.dumps(_finished()) + "\n"
+                    + '{"task": "t2", "ev')          # torn crash line
+    assert sanitize_file(str(path)).ok
+
+
+# ===================================================== runtime integration
+
+def test_real_run_journal_sanitizes_clean(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    ch = Channel("t")
+    rt = PilotRuntime(slots=2, mode="sim", journal=Journal(path))
+    prof = AppManager(rt).run([_chain("prod", 2, outputs=[ch]),
+                               _chain("cons", 2, inputs={"x": ch})])
+    assert prof.n_failed == 0
+    report = sanitize_file(path)
+    assert report.ok, report.format()
+
+
+def test_live_sanitizer_accepts_clean_run():
+    rt = PilotRuntime(slots=2, mode="sim", sanitize=True)
+    prof = AppManager(rt).run(_chain("p", 2))
+    assert prof.n_failed == 0 and rt.sanitizer.n_records > 0
+
+
+def test_live_sanitizer_primes_existing_journal(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    AppManager(PilotRuntime(slots=2, mode="sim",
+                            journal=Journal(path))).run(_chain("p", 2))
+    # restart over the same journal with live checking: replayed state
+    # must not be reported as violations
+    rt = PilotRuntime(slots=2, mode="sim", journal=Journal(path),
+                      sanitize=True)
+    prof = AppManager(rt).run(_chain("p", 2))
+    assert prof.n_failed == 0 and rt.sanitizer.report.ok
+
+
+def test_run_validate_error_rejects_deadlock_before_launch():
+    data = Channel("d", capacity=1)
+    gate = Channel("g")
+    prod = PipelineSpec(
+        [Stage([TaskSpec(_noop())], name="p0", outputs=[data]),
+         Stage([TaskSpec(_noop())], name="p1", outputs=[data]),
+         Stage([TaskSpec(_noop())], name="p2", outputs=[gate])], name="P")
+    cons = PipelineSpec(
+        [Stage([TaskSpec(_noop())], name="c0",
+               inputs={"g": gate, "d": data})], name="C")
+    am = AppManager(PilotRuntime(slots=2, mode="sim"))
+    with pytest.raises(DiagnosticError) as ei:
+        am.run([prod, cons], validate="error")
+    assert any(d.code == "E106" for d in ei.value.diagnostics)
+    # nothing launched, nothing registered: the manager is untouched
+    assert am.session is None and not am.pipeline_runs
+
+
+def test_run_validate_warn_proceeds_and_records(capsys):
+    orphan = Channel("nope")
+    prof = AppManager(PilotRuntime(slots=2, mode="sim")).run(
+        [_chain("c", inputs={"x": orphan})], validate="warn")
+    assert any("E102" in d for d in prof.results["diagnostics"])
+    assert prof.results["pipelines"]["c"]["state"] == "blocked"
+    assert "repro.analysis" in capsys.readouterr().err
+
+
+def test_run_validate_off_skips_linting():
+    prof = AppManager(PilotRuntime(slots=2, mode="sim")).run(
+        _chain("p"), validate="off")
+    assert "diagnostics" not in prof.results
+
+
+def test_run_validate_rejects_bad_mode():
+    with pytest.raises(ValueError):
+        AppManager(PilotRuntime(slots=2, mode="sim")).run(
+            _chain("p"), validate="loud")
+
+
+def test_submit_time_unknown_kernel_raises_e107():
+    am = AppManager(PilotRuntime(slots=2, mode="sim"))
+    bad = PipelineSpec([Stage([TaskSpec("no.such.kernel")], name="s0")],
+                       name="p")
+    with pytest.raises(DiagnosticError) as ei:
+        am.run(bad, validate="off")       # even with the linter off
+    d = ei.value.diagnostics[0]
+    assert d.code == "E107" and d.pipeline == "p"
+
+
+def test_named_kernel_spec_resolves_and_runs():
+    prof = AppManager(PilotRuntime(slots=2, mode="sim")).run(
+        PipelineSpec([Stage([TaskSpec("synthetic.noop"),
+                             TaskSpec("synthetic.noop")], name="s0")],
+                     name="p"), validate="error")
+    assert prof.n_tasks == 2 and prof.n_failed == 0
+
+
+def test_journal_from_env(tmp_path, monkeypatch):
+    monkeypatch.delenv("REPRO_JOURNAL_DIR", raising=False)
+    assert journal_from_env("x").path is None
+    monkeypatch.setenv("REPRO_JOURNAL_DIR", str(tmp_path))
+    j = journal_from_env("x")
+    assert j.path == str(tmp_path / "x.jsonl")
+
+
+# ===================================================== CLI
+
+def test_cli_codes_lists_registry(capsys):
+    assert analysis_cli(["codes"]) == 0
+    out = capsys.readouterr().out
+    assert all(code in out for code in CODES)
+
+
+def test_cli_sanitize(tmp_path, capsys):
+    clean = tmp_path / "clean.jsonl"
+    clean.write_text(json.dumps(_scheduled()) + "\n"
+                     + json.dumps(_finished()) + "\n")
+    dirty = tmp_path / "dirty.jsonl"
+    dirty.write_text(json.dumps(_scheduled(attempts=2)) + "\n"
+                     + json.dumps(_scheduled(attempts=2)) + "\n")
+    assert analysis_cli(["sanitize", str(clean)]) == 0
+    assert analysis_cli(["sanitize", str(tmp_path)]) == 1
+    assert "S301" in capsys.readouterr().out
+    assert analysis_cli(["sanitize", str(tmp_path / "void")]) == 1
+
+
+def test_cli_lint(tmp_path, capsys, monkeypatch):
+    mod = tmp_path / "lint_target.py"
+    mod.write_text(
+        "from repro.core import Channel, PipelineSpec, Stage, TaskSpec\n"
+        "def build():\n"
+        "    return [PipelineSpec([Stage([TaskSpec('synthetic.noop')],\n"
+        "                                name='s0')], name='p')]\n"
+        "def broken():\n"
+        "    ch = Channel('void')\n"
+        "    return [PipelineSpec([Stage([TaskSpec('synthetic.noop')],\n"
+        "                                name='s0', inputs={'x': ch})],\n"
+        "                         name='p')]\n")
+    monkeypatch.syspath_prepend(str(tmp_path))
+    assert analysis_cli(["lint", "lint_target"]) == 0
+    assert analysis_cli(["lint", "lint_target:broken"]) == 1
+    assert "E102" in capsys.readouterr().out
+
+
+# ===================================================== property test
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_accepted_pipelines_complete_in_sim(data):
+    """Soundness of the abstract executor: any pipeline set the validator
+    accepts completes in sim without deadlock — and any set that ends up
+    blocked was rejected up front."""
+    pipes = []
+    n_chains = data.draw(st.integers(min_value=1, max_value=3))
+    for c in range(n_chains):
+        cycles = data.draw(st.integers(min_value=1, max_value=3))
+        rounds = data.draw(st.integers(min_value=1, max_value=4))
+        cap = data.draw(st.integers(min_value=0, max_value=2)) or None
+        members = data.draw(st.integers(min_value=1, max_value=2))
+        ch = Channel(f"ch{c}", capacity=cap)
+        pipes.append(PipelineSpec(
+            [Stage([TaskSpec(_noop()) for _ in range(members)],
+                   name=f"cy{i}", outputs=[ch]) for i in range(cycles)],
+            name=f"prod{c}"))
+        pipes.append(PipelineSpec(
+            [Stage([TaskSpec(_noop())], name=f"r{i}", inputs={"x": ch})
+             for i in range(rounds)], name=f"cons{c}"))
+    report = validate_app(pipes)
+    prof = AppManager(PilotRuntime(slots=4, mode="sim")).run(
+        pipes, validate="off")
+    states = {n: info["state"]
+              for n, info in prof.results["pipelines"].items()}
+    all_done = all(s == "done" for s in states.values())
+    assert report.ok == all_done, (
+        f"validator said ok={report.ok} but pipeline states are {states}: "
+        f"{report.format()}")

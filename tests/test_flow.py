@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.core import (AppManager, Channel, Kernel, PipelineSpec, Stage,
-                        StageFuture, TaskSpec, TypedPortError)
+                        TaskSpec, TypedPortError)
 from repro.runtime.executor import PilotRuntime
 from repro.runtime.journal import Journal
 from repro.runtime.states import Task, TaskGraph, TaskState

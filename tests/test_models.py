@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, list_configs, reduced
-from repro.models import decode_step, forward, init_cache, init_params
+from repro.models import decode_step, forward, init_params
 from repro.models.transformer import lm_logits
 
 ARCHS = list(list_configs())

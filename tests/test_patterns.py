@@ -2,8 +2,6 @@
 import threading
 import time
 
-import pytest
-
 from repro.core import (BagOfTasks, Kernel, Pipeline, ReplicaExchange,
                         SimulationAnalysisLoop, SingleClusterEnvironment,
                         register_kernel)

@@ -289,7 +289,7 @@ def test_journal_partial_replay_skips_done():
                              journal=Journal(path)).run(g1)
         # crash simulation: keep the records of 3 tasks + one torn line
         keep = [ln for ln in open(path).read().splitlines()
-                if json.loads(ln)["task"] in ("t0", "t1", "t2")]
+                if json.loads(ln).get("task") in ("t0", "t1", "t2")]
         with open(path, "w") as f:
             f.write("\n".join(keep) + '\n{"task": "t3", "ev')
         g2 = _graph([1.0] * 6)

@@ -2,7 +2,6 @@
 production meshes, every param/cache/batch sharding must divide its array
 (jit input shardings require exact divisibility)."""
 import jax
-import numpy as np
 import pytest
 
 from repro.configs import SHAPES, get_config, list_configs

@@ -13,7 +13,7 @@ from repro.core import AppManager, Channel, Kernel, PipelineSpec, Stage, \
 from repro.dist.topology import SlotTopology
 from repro.runtime.executor import PilotRuntime
 from repro.runtime.journal import Journal
-from repro.staging import (HOST, LocalityMap, ObjectStore, StagedRef,
+from repro.staging import (LocalityMap, ObjectStore, StagedRef,
                            StagingLayer, TransferPlanner, decode_refs,
                            encode_refs, iter_refs)
 

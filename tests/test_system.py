@@ -2,7 +2,6 @@
 three patterns + real LM kernels + fused ensemble mode + serving."""
 import jax
 import numpy as np
-import pytest
 
 from repro.configs import get_config, reduced
 from repro.configs.base import ShapeSpec
