@@ -1,0 +1,149 @@
+"""Federation benchmark: multi-pilot TTC scaling + recruiter elasticity.
+
+Production ensemble campaigns outgrow one pilot: the EnTK papers scale a
+single allocation, real campaigns run several.  This bench drives the
+staging bench's O(1000)-task coupled workload (P producer ensembles
+streaming cycle payloads into channels consumed by P analysis pipelines)
+over fleets of 1, 2 and 4 pilots sharing ONE content-addressed store, in
+two regimes:
+
+  static      the fleet starts at its final size; late-binding dispatch
+              spreads the stream and keeps consumers next to their
+              replicas (``bytes_cross_pilot`` measures what it could not)
+  recruiter   the fleet starts at ONE pilot and a backlog-driven
+              Recruiter grows it against a slot budget — the TTC gap to
+              the same-sized static fleet is the cost of elasticity
+              (spin-up latency + hysteresis), and ``direction_flips``
+              certifies it converged instead of oscillating
+
+Per row: TTC, dispatch overhead (``t_rts_overhead``), per-pilot dispatch
+counts, cross-pilot transfer traffic, recruiter decision log summary.
+Emits BENCH_federation.json (repo root) + benchmarks/results/federation
+.json.  Fails loudly unless 2 pilots beat 1 by >= 1.8x on the
+locality-friendly workload and the recruiter run reports zero direction
+flips.  Journals: every pilot writes ``$REPRO_JOURNAL_DIR/federation-*``
+when the env var is set (CI sanitizes the captured files).
+
+    PYTHONPATH=src python -m benchmarks.federation [--fast] [--sim]
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import print_csv, save_results
+from benchmarks.staging import build
+from repro.core import AppManager
+from repro.federation import Recruiter, build_fleet
+
+PILOT_SLOTS = 8
+SLOTS_PER_POD = 2
+
+FULL = dict(pipelines=4, cycles=30, members=8)      # 1080 tasks, width 32
+FAST = dict(pipelines=4, cycles=6, members=4)       # 120 tasks, width 16
+
+
+def _recruiter(max_pilots: int, fast: bool) -> Recruiter:
+    return Recruiter(
+        min_pilots=1, max_pilots=max_pilots,
+        slots_per_pilot=PILOT_SLOTS,
+        budget_slots=max_pilots * PILOT_SLOTS,
+        hysteresis_s=2.0 if fast else 8.0,
+        spinup_s=1.0 if fast else 5.0,
+        grow_backlog_factor=1.5)
+
+
+def run_fleet(n_pilots: int, mode: str, sizes: dict, *,
+              recruit: bool = False, fast: bool = False) -> dict:
+    tag = f"{n_pilots}p{'-recruiter' if recruit else ''}-{mode}"
+    fleet = build_fleet(
+        1 if recruit else n_pilots, slots=PILOT_SLOTS, mode=mode,
+        slots_per_pod=SLOTS_PER_POD, threshold_bytes=1024,
+        journal_base=f"federation-{tag}",
+        recruiter=_recruiter(n_pilots, fast) if recruit else None)
+    am = AppManager(fleet)
+    payload_floats = 4096 if mode == "real" else 0
+    prof = am.run(build(mode, **sizes, payload_floats=payload_floats))
+    if prof.n_failed:
+        raise SystemExit(f"{tag}: {prof.n_failed} failed tasks")
+
+    fed = prof.results["federation"]
+    tr = fleet.staging.planner.summary()
+    row = {"config": tag, "mode": mode, "n_pilots_final": fed["n_active"],
+           "recruiter": recruit, "n_tasks": prof.n_tasks,
+           "ttc": round(prof.ttc, 3),
+           "t_rts_overhead": round(prof.t_rts_overhead, 4),
+           "t_data_total": round(prof.t_data, 4),
+           "dispatch": fed["dispatch"],
+           "locality_hit_rate": tr["locality_hit_rate"],
+           "cross_pilot": tr["cross_pilot"],
+           "bytes_cross_pilot": tr["bytes_cross_pilot"]}
+    if recruit:
+        row["recruiter_summary"] = fed["recruiter"]
+    fleet.close()
+    return row
+
+
+def main(fast: bool = False, sim_only: bool = False):
+    sizes = FAST if fast else FULL
+    rows = []
+    for n in (1, 2, 4):
+        rows.append(run_fleet(n, "sim", sizes, fast=fast))
+        r = rows[-1]
+        print(f"  {r['config']:>18}: ttc={r['ttc']:>8.1f}s "
+              f"overhead={r['t_rts_overhead']:.3f}s "
+              f"cross_pilot={r['cross_pilot']}")
+    rows.append(run_fleet(4, "sim", sizes, recruit=True, fast=fast))
+    r = rows[-1]
+    print(f"  {r['config']:>18}: ttc={r['ttc']:>8.1f}s "
+          f"recruiter={json.dumps(r['recruiter_summary'])}")
+    if not sim_only:
+        rows.append(run_fleet(2, "real", FAST, fast=True))
+        r = rows[-1]
+        print(f"  {r['config']:>18}: ttc={r['ttc']:>8.3f}s "
+              f"dispatch={json.dumps(r['dispatch'])}")
+
+    by = {r["config"]: r for r in rows}
+    speedup_2 = by["1p-sim"]["ttc"] / max(by["2p-sim"]["ttc"], 1e-9)
+    speedup_4 = by["1p-sim"]["ttc"] / max(by["4p-sim"]["ttc"], 1e-9)
+    rec = by["4p-recruiter-sim"]
+    summary = {
+        "speedup_2_pilots": round(speedup_2, 3),
+        "speedup_4_pilots": round(speedup_4, 3),
+        "elasticity_cost_s": round(rec["ttc"] - by["4p-sim"]["ttc"], 3),
+        "recruiter_direction_flips":
+            rec["recruiter_summary"]["direction_flips"],
+        "bytes_cross_pilot_max":
+            max(r["bytes_cross_pilot"] for r in rows)}
+    out = {"pilot_slots": PILOT_SLOTS, "slots_per_pod": SLOTS_PER_POD,
+           "rows": rows, "summary": summary}
+
+    save_results("federation", rows)
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    with open(os.path.join(root, "BENCH_federation.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    print_csv("federation", rows,
+              ["config", "mode", "n_pilots_final", "n_tasks", "ttc",
+               "t_rts_overhead", "cross_pilot", "bytes_cross_pilot"])
+    print(f"\nsummary: {json.dumps(summary)}")
+
+    if speedup_2 < 1.8:
+        raise SystemExit(
+            f"2-pilot speedup {speedup_2:.2f} below the 1.8x bar — "
+            "late-binding dispatch is not spreading the stream")
+    if summary["recruiter_direction_flips"] > 0:
+        raise SystemExit(
+            f"recruiter oscillated ({summary['recruiter_direction_flips']}"
+            " direction flips) — hysteresis is not holding")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="small sizes (CI smoke)")
+    ap.add_argument("--sim", action="store_true",
+                    help="DES rows only (no real-mode run)")
+    a = ap.parse_args()
+    main(fast=a.fast, sim_only=a.sim)

@@ -1,0 +1,152 @@
+"""Federated PST showcase: the SAME coupled ensemble app, run on one
+pilot, then on a 2-pilot fleet, then on an elastic fleet that recruits
+pilots against the backlog, then through a whole-pilot failure — without
+changing a line of the application.  The only thing that varies is the
+runtime object handed to AppManager.
+
+    PYTHONPATH=src python examples/pst_federated.py [--fast]
+    PYTHONPATH=src python examples/pst_federated.py --validate-only
+
+Set REPRO_JOURNAL_DIR to capture per-pilot journals (federated runs write
+one file per pilot plus a fleet file; the CI sanitizer gate replays every
+file's invariants afterwards).
+"""
+import argparse
+import os
+import sys
+
+from repro.core import AppManager, Channel, Kernel, PipelineSpec, Stage, \
+    TaskSpec
+from repro.federation import Recruiter, build_fleet
+
+PILOT_SLOTS = 8
+FULL = dict(pipelines=4, cycles=10, members=8)    # 320 members + 40 ana
+FAST = dict(pipelines=4, cycles=4, members=4)     # 64 members + 16 ana
+MEMBER_NBYTES = 64 << 20
+
+
+def _member(dur=1.0, nbytes=MEMBER_NBYTES):
+    k = Kernel("synthetic.noop")
+    k.sim_duration = dur
+    k.output_nbytes = nbytes
+    return k
+
+
+def _coupled(pipelines, cycles, members):
+    """P producer ensembles streaming cycle outputs into channels consumed
+    by P analysis pipelines (the staging bench's coupled shape)."""
+    pipes = []
+    for p in range(pipelines):
+        ch = Channel(f"traj{p}")
+        pipes.append(PipelineSpec(
+            [Stage([TaskSpec(_member(), name=f"p{p}.c{c}.m{m}")
+                    for m in range(members)],
+                   name=f"cycle{c}", outputs=[ch])
+             for c in range(cycles)], name=f"producer{p}"))
+        pipes.append(PipelineSpec(
+            [Stage([TaskSpec(_member(dur=0.5, nbytes=0),
+                             name=f"a{p}.r{c}")],
+                   name=f"round{c}", inputs={"traj": ch})
+             for c in range(cycles)], name=f"analysis{p}"))
+    return pipes
+
+
+def _run(fleet, sizes, label):
+    prof = AppManager(fleet).run(_coupled(**sizes), validate="error")
+    fed = prof.results["federation"]
+    tr = fleet.staging.planner.summary()
+    print(f"  {label}: ttc={prof.ttc:.1f}s n_failed={prof.n_failed} "
+          f"dispatch={fed['dispatch']} "
+          f"cross_pilot_bytes={tr['bytes_cross_pilot']}")
+    assert prof.n_failed == 0
+    fleet.close()
+    return prof, fed
+
+
+def main(fast=False):
+    sizes = FAST if fast else FULL
+
+    print("== 1) one pilot (the baseline the app was written against) ==")
+    f1 = build_fleet(1, slots=PILOT_SLOTS, slots_per_pod=2,
+                     journal_base="federated_1p")
+    base, _ = _run(f1, sizes, "1 pilot ")
+
+    print("== 2) two pilots, same app: late-binding dispatch spreads the "
+          "stream ==")
+    f2 = build_fleet(2, slots=PILOT_SLOTS, slots_per_pod=2,
+                     journal_base="federated_2p")
+    prof2, fed2 = _run(f2, sizes, "2 pilots")
+    assert len(fed2["dispatch"]) == 2, "one pilot got every task"
+    speedup = base.ttc / max(prof2.ttc, 1e-9)
+    print(f"  speedup over one pilot: {speedup:.2f}x")
+    assert speedup > 1.3, f"federation speedup only {speedup:.2f}x"
+
+    print("== 3) elastic fleet: a Recruiter grows it against the "
+          "backlog ==")
+    rec = Recruiter(min_pilots=1, max_pilots=4,
+                    slots_per_pilot=PILOT_SLOTS,
+                    budget_slots=4 * PILOT_SLOTS,
+                    hysteresis_s=2.0 if fast else 6.0,
+                    spinup_s=1.0 if fast else 3.0,
+                    grow_backlog_factor=1.5)
+    fe = build_fleet(1, slots=PILOT_SLOTS, slots_per_pod=2,
+                     journal_base="federated_elastic", recruiter=rec)
+    _, fede = _run(fe, sizes, "elastic ")
+    s = fede["recruiter"]
+    print(f"  recruiter: {s['n_spawned']} spawned, {s['n_joined']} joined,"
+          f" {s['n_retired']} retired, {s['direction_flips']} thrash flips")
+    assert s["n_joined"] >= 1, "recruiter never grew the fleet"
+    assert s["direction_flips"] == 0, "recruiter oscillated"
+
+    print("== 4) whole-pilot failure mid-run: retries land on the "
+          "survivor ==")
+    fk = build_fleet(2, slots=PILOT_SLOTS, slots_per_pod=2,
+                     journal_base="federated_chaos", max_retries=3)
+    killed = {}
+
+    def chaos(rt, graph, now):
+        if now >= 2.0 and not killed:
+            killed["t"] = now
+            fk.inject_pilot_failure("p2")
+    for rt in fk.pilots.values():
+        rt.on_schedule = chaos
+    prof, fed = _run(fk, sizes, "chaos   ")
+    assert killed and prof.n_pod_lost > 0, "the kill missed all work"
+    assert fed["dispatch"], "no dispatch record"
+    print(f"  pilot p2 died at v={killed['t']:g}s: "
+          f"{prof.n_pod_lost} attempts lost, {prof.n_retries} retried, "
+          f"0 permanently failed")
+
+    if os.environ.get("REPRO_JOURNAL_DIR"):
+        print(f"  journals in {os.environ['REPRO_JOURNAL_DIR']} "
+              "(one per pilot + one per fleet)")
+
+
+def validate_only(fast=False) -> int:
+    """Pre-flight lint of the federated app: the fleet-aware placement
+    checks (E114/W202) and the recruiter configuration check (W205) run
+    against the actual fleet the app would use."""
+    from repro.analysis import validate_app
+    rec = Recruiter(min_pilots=1, max_pilots=4,
+                    slots_per_pilot=PILOT_SLOTS,
+                    budget_slots=4 * PILOT_SLOTS,
+                    hysteresis_s=6.0, spinup_s=3.0)
+    fleet = build_fleet(2, slots=PILOT_SLOTS, slots_per_pod=2,
+                        recruiter=rec)
+    report = validate_app(_coupled(**(FAST if fast else FULL)),
+                          runtime=fleet)
+    print(report.format())
+    fleet.close()
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="small sizes (CI smoke)")
+    ap.add_argument("--validate-only", action="store_true",
+                    help="lint the app against the fleet and exit (no run)")
+    args = ap.parse_args()
+    if args.validate_only:
+        sys.exit(validate_only(fast=args.fast))
+    main(fast=args.fast)

@@ -31,6 +31,12 @@ Static validator — errors
   E113  invalid-ports: a stage/task ``inputs``/``outputs`` declaration is
         structurally malformed.
 
+Static validator — federation (runtime is a repro.federation.Fleet)
+  E114  fleet-slots-unsatisfiable: a task wants more cores than any pilot
+        the fleet can EVER field — wider than every active pilot's
+        reachable width and wider than anything the recruiter's slot
+        budget could spin up.
+
 Static validator — warnings
   W201  channel-unconsumed: a fifo channel is produced but never consumed.
   W202  task-wider-than-pilot: a task needs a recarve (grow) before any
@@ -39,6 +45,9 @@ Static validator — warnings
         preferences can honor — late retries reuse previously-blamed pods.
   W204  spill-guaranteed: a declared put must exceed ``byte_budget`` and
         will always hit the spill path.
+  W205  recruiter-thrash: the recruiter's hysteresis window is shorter
+        than its pilot spin-up time, so it can re-decide before the pilot
+        it just ordered arrives — fleet size can oscillate.
 
 Journal sanitizer
   S301  epoch-regression: ``scheduled`` launch epochs not strictly
@@ -90,6 +99,8 @@ CODES = {
              "two explicit TaskSpec names collide"),
     "E113": ("invalid-ports",
              "malformed inputs/outputs declaration"),
+    "E114": ("fleet-slots-unsatisfiable",
+             "cores request exceeds every pilot the fleet can ever field"),
     "W201": ("channel-unconsumed",
              "fifo channel produced but never consumed"),
     "W202": ("task-wider-than-pilot",
@@ -98,6 +109,8 @@ CODES = {
              "max_retries exceeds distinct pods; exclusions will repeat"),
     "W204": ("spill-guaranteed",
              "declared put exceeds byte_budget; always spills"),
+    "W205": ("recruiter-thrash",
+             "hysteresis shorter than pilot spin-up; size can oscillate"),
     "S301": ("epoch-regression",
              "scheduled launch epochs not strictly increasing"),
     "S302": ("zombie-clobber",

@@ -20,6 +20,14 @@ one, so per-task epoch state resets at every ``session_start`` record
 survives restarts by design (replayed puts/takes), so the flow-binding
 state is global across segments.
 
+Pilot scoping: federated runs stamp every record with a ``pilot`` tag
+(Journal.tag) and a FederatedSession writes a ``session_start`` into EACH
+pilot's journal.  A *tagged* session_start therefore resets only that
+pilot's task segments — otherwise one pilot's restart would wipe the
+epoch state of every other pilot sharing the observer (or a merged
+journal) and zombie clobbers would go unseen.  Untagged session_start
+records keep the old reset-everything behavior.
+
 Checked invariants (codes in ``diagnostics.CODES``):
 
   S301  epoch monotonicity: ``scheduled`` records for one task carry
@@ -55,7 +63,7 @@ _REAL_TOL = 1e-3
 class _TaskSeg:
     """Per-task state within one session segment."""
     __slots__ = ("last_epoch", "abandoned", "staged", "releases",
-                 "terminal")
+                 "terminal", "pilot")
 
     def __init__(self):
         self.last_epoch: Optional[int] = None
@@ -63,6 +71,7 @@ class _TaskSeg:
         self.staged: List[str] = []       # digests on the last scheduled
         self.releases = 0
         self.terminal = False
+        self.pilot: Optional[str] = None  # owning pilot (tagged journals)
 
 
 class JournalSanitizer:
@@ -123,7 +132,14 @@ class JournalSanitizer:
         ev = rec.get("event")
         if ev == "session_start":
             self._segment += 1
-            self._tasks = {}
+            tag = rec.get("pilot")
+            if tag is None:
+                self._tasks = {}           # single-runtime journal: reset all
+            else:
+                # a pilot's restart resets ONLY that pilot's task segments;
+                # other pilots' epoch state must not bleed away
+                self._tasks = {k: s for k, s in self._tasks.items()
+                               if s.pilot != tag}
             return
         if ev == "channel_put":
             self._on_put(rec)
@@ -150,6 +166,8 @@ class JournalSanitizer:
     # ------------------------------------------------------------ checks
     def _on_scheduled(self, task: str, rec: dict):
         seg = self._seg(task)
+        if rec.get("pilot") is not None:
+            seg.pilot = rec["pilot"]      # task (re)binds to this pilot
         epoch = int(rec.get("attempts", 0))
         if seg.last_epoch is not None:
             if epoch <= seg.last_epoch:

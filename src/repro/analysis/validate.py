@@ -158,6 +158,7 @@ def _structural_pass(report: Report, runs, seen_channels, runtime):
             _check_stage(report, r, si, stage, seen_channels, runtime,
                          task_names)
     _check_retry_policy(report, runtime)
+    _check_recruiter(report, runtime)
 
 
 def _check_stage(report, r, si, stage, seen_channels, runtime, task_names):
@@ -252,11 +253,61 @@ def _check_put_dtype(report, kernel: Optional[Kernel], ch: Channel, loc,
                    channel=ch.name, **loc)
 
 
+def _pilot_reachable_width(rt) -> int:
+    """Widest slot count one pilot can ever field: its current slots, or
+    the best grow-recarve its device topology admits."""
+    topo = getattr(rt, "topology", None)
+    if topo is None:
+        return rt.slots
+    from repro.dist.sharding import shardable_recarve_counts
+    return max(shardable_recarve_counts(topo))
+
+
+def _check_fleet_placement(report, kernel, fleet, cores, loc):
+    """E114/W202 for a federated runtime: a task must fit inside ONE
+    pilot (the fleet's summed slots are not co-schedulable), so the bound
+    is the widest pilot any future of this fleet can field — active
+    pilots at their reachable recarve widths, plus whatever the recruiter
+    could still spin up within its slot budget."""
+    retired = getattr(fleet, "retired", set())
+    current = reachable = 0
+    for name, rt in fleet.pilots.items():
+        if name in retired:
+            continue
+        current = max(current, rt.slots)
+        reachable = max(reachable, _pilot_reachable_width(rt))
+    rec = getattr(fleet, "recruiter", None)
+    if rec is not None and getattr(fleet, "pilot_factory", None) is not None \
+            and rec.slots_per_pilot <= rec.budget_slots:
+        reachable = max(reachable, int(rec.slots_per_pilot))
+    if cores <= current:
+        return
+    if cores > reachable:
+        report.add("E114",
+                   f"kernel {kernel.name!r} wants {cores} slots but no "
+                   f"pilot this fleet can ever field goes past {reachable} "
+                   f"(widest active pilot: {current}; "
+                   + (f"recruiter pilots: {rec.slots_per_pilot} slots"
+                      if rec is not None else "no recruiter")
+                   + "): the fleet slot budget is unsatisfiable", **loc)
+    else:
+        report.add("W202",
+                   f"kernel {kernel.name!r} wants {cores} slots; no active "
+                   f"pilot fields that width yet (widest: {current}) — the "
+                   "task waits for a recarve or a recruited pilot", **loc)
+
+
 def _check_placement(report, kernel: Optional[Kernel], runtime, loc):
-    """E108/W202: can the pilot EVER grant this task's slot width?"""
+    """E108/W202: can the pilot EVER grant this task's slot width?
+    Federated runtimes route to the per-pilot rule (E114/W202) first —
+    ``runtime.slots`` on a Fleet is the SUM over pilots, which a single
+    task can never co-schedule."""
     if kernel is None or runtime is None:
         return
     cores = int(kernel.cores or 1)
+    if getattr(runtime, "pilots", None) is not None:
+        _check_fleet_placement(report, kernel, runtime, cores, loc)
+        return
     if cores <= runtime.slots:
         return
     topo = getattr(runtime, "topology", None)
@@ -325,6 +376,21 @@ def _check_retry_policy(report, runtime):
                    f"max_retries={runtime.max_retries} allows {budget} "
                    f"attempts but only {len(pods)} pods exist: attempts "
                    f"beyond {len(pods)} re-use previously-blamed pods")
+
+
+def _check_recruiter(report, runtime):
+    """W205: a recruiter that re-decides faster than its pilots arrive
+    sees the backlog it already ordered capacity for and orders again —
+    the classic autoscaler thrash.  Hysteresis must cover spin-up."""
+    rec = getattr(runtime, "recruiter", None)
+    if rec is None:
+        return
+    if rec.hysteresis_s < rec.spinup_s:
+        report.add("W205",
+                   f"recruiter hysteresis_s={rec.hysteresis_s:g} is "
+                   f"shorter than spinup_s={rec.spinup_s:g}: the fleet "
+                   "can re-decide before the pilot it just ordered "
+                   "arrives — size oscillation is likely")
 
 
 # ------------------------------------------------------------ layer 2

@@ -49,6 +49,12 @@ Placement: tasks land on mesh slots via ``PilotRuntime.submesh_for`` — in
 real mode a kernel's ``ctx["submesh"]`` is the jax Mesh over the devices of
 the slots the scheduler granted to its task (requires the runtime to be
 built with a ``SlotTopology``).
+
+Federation: ``AppManager`` also accepts a :class:`repro.federation.Fleet`
+as its runtime — the same application then late-binds every task across N
+pilots (different slot counts/meshes, per-pilot journals, optional
+backlog-driven recruiting) with no declaration change; the per-pilot
+dispatch counts land in ``profile.results["federation"]``.
 """
 from __future__ import annotations
 
@@ -926,4 +932,14 @@ class AppManager:
             for pr in self.pipeline_runs.values()}
         if self.staging is not None:
             prof.results["staging"] = self.staging.summary()
+        if getattr(self.runtime, "pilots", None) is not None:
+            # federated runtime (repro.federation.Fleet): fleet shape,
+            # recruiter activity, and where the dispatcher sent the work
+            dispatch: Dict[str, int] = {}
+            for t in self.session.graph.tasks.values():
+                p = t.meta.get("pilot")
+                if p is not None:
+                    dispatch[p] = dispatch.get(p, 0) + 1
+            prof.results["federation"] = {**self.runtime.summary(),
+                                          "dispatch": dispatch}
         return prof

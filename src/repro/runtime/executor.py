@@ -234,13 +234,18 @@ class PilotRuntime:
             return delta_out
 
     # ------------------------------------------------------------ pods
+    #: pod-name namespace for pilots WITHOUT a staging locality map —
+    #: repro.federation sets it per pilot ("p1:") so two pilots' pod names
+    #: never collide in a shared exclusion set / fault injector / journal
+    _pod_prefix = ""
+
     def _pod_of(self, slot_id: int) -> str:
         """Locality domain of a slot id (staging's map when bound, else a
         one-slot-per-pod convention — so fault exclusion works without a
         staging layer)."""
         if self.staging is not None and self.staging.locality is not None:
             return self.staging.locality.pod_of(int(slot_id))
-        return f"pod{int(slot_id)}"
+        return f"{self._pod_prefix}pod{int(slot_id)}"
 
     def _task_pod(self, t: Task) -> Optional[str]:
         ids = t.meta.get("slot_ids")
@@ -465,6 +470,74 @@ class RuntimeSession:
             return self._busy
         return self.rt.slots - self._free["n"]
 
+    # ------------------------------------------------------- dispatch hooks
+    # Indirection points the federation layer (repro.federation) overrides
+    # to route each task/pod to its owning pilot and to keep per-pilot
+    # capacity accounts.  The base session has exactly one pilot, so they
+    # all collapse to self.rt / the flat counters.
+
+    def _rt_for(self, t: Task) -> PilotRuntime:
+        """Runtime owning ``t``'s current attempt."""
+        return self.rt
+
+    def _rt_for_pod(self, pod: str) -> PilotRuntime:
+        """Runtime owning pod ``pod`` (federation parses the pilot prefix
+        out of the pod name)."""
+        return self.rt
+
+    def _occupy(self, t: Task):
+        """Charge ``t``'s width to the sim busy account at launch."""
+        self._busy += t.slots
+
+    def _vacate(self, t: Task):
+        """Return ``t``'s width to the sim busy account."""
+        self._busy -= t.slots
+
+    def _can_launch_real(self, t: Task) -> bool:
+        """Capacity test for one real-mode launch (federation also binds
+        the task to a pilot here)."""
+        return t.slots <= self._free["n"]
+
+    def _debit_free(self, t: Task):
+        self._free["n"] -= t.slots
+
+    def _credit_free(self, t: Task):
+        self._free["n"] += t.slots
+
+    def _credit_free_n(self, rt: PilotRuntime, n: int):
+        """Credit ``n`` slots of capacity belonging to ``rt`` (resize,
+        pod revival, kill-abandon deltas)."""
+        self._free["n"] += n
+
+    def _too_wide_sim(self, t: Task) -> bool:
+        """True when no capacity this session will EVER have can host
+        ``t`` (the cancel-unsatisfiable rule's width half)."""
+        return t.slots > self.rt.slots
+
+    def _too_wide_real(self, t: Task) -> bool:
+        return t.slots > self._free["n"]
+
+    def _fault_source(self):
+        """Injector consulted by the drain loops (federation: an
+        aggregate over every pilot's injector)."""
+        return self.rt.faults
+
+    def _housekeeping_sim(self):
+        """Per-pass sim housekeeping: strategy hook, pending resizes,
+        topology compaction."""
+        rt = self.rt
+        if rt.on_schedule is not None:
+            rt.on_schedule(rt, self.graph, self.vnow)
+        rt._apply_resize()
+        rt._apply_topology_drop()
+
+    def _housekeeping_real(self):
+        rt = self.rt
+        if rt.on_schedule is not None:
+            rt.on_schedule(rt, self.graph, None)
+        self._free["n"] += rt._apply_resize()   # elastic grow/shrink
+        rt._apply_topology_drop()
+
     # ------------------------------------------------------------ submit
     def submit(self, tasks: Union[Task, Iterable[Task]], *,
                dynamic: bool = False) -> List[Task]:
@@ -581,8 +654,9 @@ class RuntimeSession:
             running = (t for _, t in self._live_attempts.values()
                        if t.state == TaskState.RUNNING)
         for t in running:
-            p = rt._task_pod(t)
-            if p is not None and p not in rt.dead_pods:
+            tr = self._rt_for(t)
+            p = tr._task_pod(t)
+            if p is not None and p not in tr.dead_pods:
                 counts[p] = counts.get(p, 0) + 1
         if counts:
             return max(sorted(counts), key=lambda p: counts[p])
@@ -593,7 +667,7 @@ class RuntimeSession:
         """A replacement pod joins under the dead pod's slot ids (fresh
         pod: no data replicas — staging dropped them at the kill).
         Returns the capacity gained (real mode credits its free count)."""
-        rt, prof = self.rt, self.prof
+        rt, prof = self._rt_for_pod(pod), self.prof
         ids = rt._dead_pod_ids.pop(pod, None)
         if not ids:
             return 0
@@ -619,8 +693,8 @@ class RuntimeSession:
         return out
 
     def _launch_sim(self, t: Task):
-        self._busy += t.slots
-        rt = self.rt
+        self._occupy(t)
+        rt = self._rt_for(t)
         rt._acquire_slots(t)
         # staged-input transfers execute here — between pop_ready and
         # launch — and extend the task's occupancy on the virtual clock
@@ -666,7 +740,7 @@ class RuntimeSession:
             self._launch_sim(t)
 
     def _finish_sim(self, t: Task):
-        rt, graph, prof = self.rt, self.graph, self.prof
+        rt, graph, prof = self._rt_for(t), self.graph, self.prof
         t.record_attempt("done", pod=rt._task_pod(t))
         t.state = TaskState.DONE
         t.v_finished = self.vnow
@@ -688,17 +762,18 @@ class RuntimeSession:
             # pod-lost original may be back in the frontier as NEW)
             orig = graph.tasks.get(t.speculative_of)
             if orig is not None and not orig.state.terminal:
+                ort = self._rt_for(orig)
                 was_running = orig.state == TaskState.RUNNING
-                orig.record_attempt("superseded", pod=rt._task_pod(orig))
+                orig.record_attempt("superseded", pod=ort._task_pod(orig))
                 orig.state = TaskState.DONE
                 orig.v_finished = self.vnow
                 if was_running:
                     orig.meta["slot_freed"] = True
-                    self._busy -= orig.slots
-                    rt._release_slots(orig)
+                    self._vacate(orig)
+                    ort._release_slots(orig)
                 orig.meta["launch_epoch"] = None
-                rt.journal.record(orig, "finished", by="speculative")
-                rt._staging_finish(orig)
+                ort.journal.record(orig, "finished", by="speculative")
+                ort._staging_finish(orig)
                 self._queue_callback(orig)
             self._spec_launched.pop(t.speculative_of, None)
         else:
@@ -708,35 +783,39 @@ class RuntimeSession:
             # canceled clone still moved data
             twin = self._spec_launched.pop(t.name, None)
             if twin is not None and not twin.state.terminal:
-                twin.record_attempt("canceled", pod=rt._task_pod(twin))
+                trt = self._rt_for(twin)
+                twin.record_attempt("canceled", pod=trt._task_pod(twin))
                 twin.state = TaskState.CANCELED
-                rt.journal.record(twin, "canceled", by="original")
-                rt._staging_finish(twin)
+                trt.journal.record(twin, "canceled", by="original")
+                trt._staging_finish(twin)
                 prof.t_data += twin.t_data
             self._queue_callback(t)
 
     def _apply_faults_sim(self):
-        rt = self.rt
-        for kind, pod in rt.faults.pop_due(self.vnow):
+        for kind, pod in self._fault_source().pop_due(self.vnow):
             if kind == REVIVE:
                 self._revive_pod(pod)
             else:
                 victim = pod if pod is not None else self._pick_victim()
-                if victim is None or victim in rt.dead_pods:
+                if victim is None \
+                        or victim in self._rt_for_pod(victim).dead_pods:
                     continue
                 self._kill_pod_sim(victim)
 
     def _kill_pod_sim(self, pod: str):
-        rt, prof = self.rt, self.prof
+        rt, prof = self._rt_for_pod(pod), self.prof
         ids = rt._pod_ids(pod)
         if not ids:
             return
         idset = set(ids)
         rt._retire_ids(ids, pod)
         rt.slots = max(rt.slots - len(ids), 0)
+        # slot ids are pilot-local integers, so the victim scan must also
+        # match the owning runtime — id 3 on another pilot is a bystander
         victims = [t for _, _, epoch, t in self._heap
                    if t.meta.get("launch_epoch") == epoch
                    and t.state == TaskState.RUNNING
+                   and self._rt_for(t) is rt
                    and idset.intersection(t.meta.get("slot_ids", ()))]
         for t in victims:
             self._abandon_sim(t, pod)
@@ -755,9 +834,9 @@ class RuntimeSession:
         """Fail one in-flight sim attempt on a dead pod: invalidate its
         launch epoch (the heap entry becomes a no-op), free its capacity,
         record the attempt against the pod, and retry or fail."""
-        rt, prof = self.rt, self.prof
+        rt, prof = self._rt_for(t), self.prof
         t.meta["launch_epoch"] = None
-        self._busy -= t.slots
+        self._vacate(t)
         rt._release_slots(t)
         err = f"pod_lost: pod {pod} died at v={self.vnow:g}"
         t.record_attempt("pod_lost", pod=pod, error=err)
@@ -789,10 +868,7 @@ class RuntimeSession:
         rt, graph, prof = self.rt, self.graph, self.prof
         while True:
             self._flush_callbacks()
-            if rt.on_schedule is not None:
-                rt.on_schedule(rt, graph, self.vnow)
-            rt._apply_resize()
-            rt._apply_topology_drop()
+            self._housekeeping_sim()
             self._overhead(self._schedule_sim)
 
             # fault events due before the next completion preempt it: a
@@ -801,13 +877,14 @@ class RuntimeSession:
             # heap, kills already due fire in place, and a pending
             # replacement pod advances the clock to its arrival (tasks
             # starved by the shrink wait for it instead of canceling).
-            if rt.faults is not None:
-                nf = rt.faults.next_time()
+            faults = self._fault_source()
+            if faults is not None:
+                nf = faults.next_time()
                 if nf is not None and (
                         (self._heap and nf <= self._heap[0][0])
                         or (not self._heap
                             and (nf <= self.vnow
-                                 or (rt.faults.pending_revive()
+                                 or (faults.pending_revive()
                                      and not graph.done())))):
                     self.vnow = max(self.vnow, nf)
                     self._overhead(self._apply_faults_sim)
@@ -821,18 +898,18 @@ class RuntimeSession:
                 # so a narrow task queued behind a too-wide one still runs
                 # on the next pass — same rule as real mode.  A pending
                 # pod respawn defers the too-wide rule: capacity returns.
-                reviving = (rt.faults is not None
-                            and rt.faults.pending_revive())
+                reviving = faults is not None and faults.pending_revive()
                 canceled = False
                 for t in graph.tasks.values():
                     if t.state == TaskState.NEW and (
-                            (t.slots > rt.slots and not reviving) or any(
+                            (self._too_wide_sim(t) and not reviving) or any(
                                 graph.tasks[d].state.terminal
                                 and graph.tasks[d].state != TaskState.DONE
                                 for d in t.deps)):
+                        tr = self._rt_for(t)
                         t.state = TaskState.CANCELED
-                        rt.journal.record(t, "canceled")
-                        rt._staging_finish(t)
+                        tr.journal.record(t, "canceled")
+                        tr._staging_finish(t)
                         self._queue_callback(t)
                         canceled = True
                 if not canceled and not reviving:
@@ -840,9 +917,10 @@ class RuntimeSession:
                     # stuck NEW task always matches one rule above)
                     for t in graph.tasks.values():
                         if t.state == TaskState.NEW:
+                            tr = self._rt_for(t)
                             t.state = TaskState.CANCELED
-                            rt.journal.record(t, "canceled")
-                            rt._staging_finish(t)
+                            tr.journal.record(t, "canceled")
+                            tr._staging_finish(t)
                             self._queue_callback(t)
                 self._flush_callbacks()
                 if graph.done():
@@ -859,12 +937,12 @@ class RuntimeSession:
                 # canceled twin: slot returns here; do NOT advance the
                 # clock to its stale finish time
                 if not t.meta.get("slot_freed"):
-                    self._busy -= t.slots
-                rt._release_slots(t)
+                    self._vacate(t)
+                self._rt_for(t)._release_slots(t)
                 continue
             self.vnow = max(self.vnow, vfin)
-            self._busy -= t.slots
-            rt._release_slots(t)
+            self._vacate(t)
+            self._rt_for(t)._release_slots(t)
             self._overhead(lambda: self._finish_sim(t))
 
             # straggler speculation: clone still-running outliers
@@ -876,6 +954,7 @@ class RuntimeSession:
         for vfin, sq, epoch, t in list(self._heap):
             if t.meta.get("launch_epoch") != epoch:
                 continue
+            rt = self._rt_for(t)
             hist = self._durations.get(t.stage, [])
             if (t.idempotent and not t.state.terminal
                     and t.speculative_of is None
@@ -896,8 +975,10 @@ class RuntimeSession:
                     dup.v_started = max(self.vnow, trigger)
                     dup.attempts = 1
                     dup.meta["launch_epoch"] = 1
+                    if "pilot" in t.meta:      # clone runs on the same pilot
+                        dup.meta["pilot"] = t.meta["pilot"]
                     prof.n_speculative += 1
-                    self._busy += t.slots
+                    self._occupy(dup)
                     # the clone reads the SAME staged inputs as the
                     # original: share the manifest (extra holds on the
                     # same blobs) so its transfers plan and charge t_data
@@ -924,30 +1005,33 @@ class RuntimeSession:
         threads — a thread that exited without running its completion
         bookkeeping (e.g. SystemExit through the isolation boundary) —
         and, with a detector configured, stale heartbeats."""
-        rt = self.rt
         now = time.perf_counter()
         elapsed = now - self._t0
-        if rt.faults is not None:
-            for kind, pod in rt.faults.pop_due(elapsed):
+        faults = self._fault_source()
+        if faults is not None:
+            for kind, pod in faults.pop_due(elapsed):
                 if kind == REVIVE:
-                    self._free["n"] += self._revive_pod(pod)
+                    self._credit_free_n(self._rt_for_pod(pod),
+                                        self._revive_pod(pod))
                 else:
                     victim = pod if pod is not None else self._pick_victim()
-                    if victim is not None and victim not in rt.dead_pods:
+                    if victim is not None and victim \
+                            not in self._rt_for_pod(victim).dead_pods:
                         self._kill_pod_real(victim, elapsed)
         for (name, epoch), (th, t) in list(self._live_attempts.items()):
             if t.meta.get("launch_epoch") != epoch \
                     or t.state != TaskState.RUNNING:
                 continue
+            tr = self._rt_for(t)
             if not th.is_alive():
-                self._abandon_real(t, rt._task_pod(t), "worker_died",
+                self._abandon_real(t, tr._task_pod(t), "worker_died",
                                    credit_slots=True)
-            elif rt.detector is not None and rt.detector.stale(t, now):
-                self._abandon_real(t, rt._task_pod(t), "heartbeat_timeout",
+            elif tr.detector is not None and tr.detector.stale(t, now):
+                self._abandon_real(t, tr._task_pod(t), "heartbeat_timeout",
                                    credit_slots=True)
 
     def _kill_pod_real(self, pod: str, elapsed: float):
-        rt, prof = self.rt, self.prof
+        rt, prof = self._rt_for_pod(pod), self.prof
         ids = rt._pod_ids(pod)
         if not ids:
             return
@@ -956,13 +1040,14 @@ class RuntimeSession:
         abandoned_w = 0
         for (name, epoch), (th, t) in list(self._live_attempts.items()):
             if t.meta.get("launch_epoch") == epoch \
+                    and self._rt_for(t) is rt \
                     and idset.intersection(t.meta.get("slot_ids", ())):
                 abandoned_w += t.slots
                 self._abandon_real(t, pod, "pod_lost", credit_slots=False)
         rt.slots = max(rt.slots - len(ids), 0)
         # the pod's free slots leave capacity; abandoned widths return
         # (their surviving ids re-entered the id pool at release)
-        self._free["n"] += abandoned_w - len(ids)
+        self._credit_free_n(rt, abandoned_w - len(ids))
         if rt.staging is not None:
             rt.staging.on_pod_lost(pod)
         rt.journal.record_event("pod_lost", pod=pod, n_slots=len(ids))
@@ -979,7 +1064,7 @@ class RuntimeSession:
         stale heartbeat).  The worker thread cannot be stopped; popping
         the live-attempt entry turns its eventual completion into a
         zombie that skips all bookkeeping."""
-        rt, prof = self.rt, self.prof
+        rt, prof = self._rt_for(t), self.prof
         entry = self._live_attempts.pop((t.name, t.meta.get("launch_epoch")),
                                         None)
         if entry is not None:
@@ -987,7 +1072,7 @@ class RuntimeSession:
         t.meta["launch_epoch"] = None
         self._inflight -= 1
         if credit_slots:
-            self._free["n"] += t.slots
+            self._credit_free(t)
         rt._release_slots(t)
         err = f"{reason}" + (f": pod {pod}" if pod else "")
         t.record_attempt(reason, pod=pod, error=err)
@@ -1007,7 +1092,7 @@ class RuntimeSession:
             self._queue_callback(t)
 
     def _execute_real(self, t: Task):
-        rt, prof, cv = self.rt, self.prof, self._cv
+        rt, prof, cv = self._rt_for(t), self.prof, self._cv
         epoch = t.meta.get("launch_epoch")
         t.t_started = time.perf_counter()
         outcome = TaskState.DONE
@@ -1048,7 +1133,7 @@ class RuntimeSession:
             pod = rt._task_pod(t)
             if t.run is not None and outcome == TaskState.DONE:
                 t.result = res
-            self._free["n"] += t.slots
+            self._credit_free(t)
             rt._release_slots(t)
             # in-kernel lazy derefs (ctx["staging"].get) charged to t_data
             # come OUT of the exec window — the decomposition terms must
@@ -1098,16 +1183,35 @@ class RuntimeSession:
                 else:
                     th.join()
 
+    def _launch_real(self, t: Task, workers: List[threading.Thread]):
+        """Start one real-mode attempt (capacity already reserved via
+        :meth:`_can_launch_real`)."""
+        rt, graph = self._rt_for(t), self.graph
+        self._debit_free(t)
+        rt._acquire_slots(t)
+        t.meta["dep_results"] = {
+            d: graph.tasks[d].result for d in t.deps}
+        t.attempts += 1
+        t.error = None         # no stale error into a retry
+        t.state = TaskState.RUNNING
+        t.t_scheduled = time.perf_counter()
+        t.meta["launch_epoch"] = t.attempts
+        rt.journal.record(t, "scheduled", pod=rt._task_pod(t),
+                          **_staged_extra(t))
+        self._inflight += 1
+        th = threading.Thread(target=self._execute_real,
+                              args=(t,), daemon=True)
+        self._live_attempts[(t.name, t.attempts)] = (th, t)
+        workers.append(th)
+        th.start()
+
     def _drain_real_loop(self, workers: List[threading.Thread]):
         rt, graph, prof = self.rt, self.graph, self.prof
         cv = self._cv
         with cv:
             while True:
                 self._flush_callbacks()
-                if rt.on_schedule is not None:
-                    rt.on_schedule(rt, graph, None)
-                self._free["n"] += rt._apply_resize()   # elastic grow/shrink
-                rt._apply_topology_drop()
+                self._housekeeping_real()
                 self._check_faults_real()
                 t0 = time.perf_counter()
                 # pop from the incremental frontier, re-checking capacity
@@ -1134,27 +1238,11 @@ class RuntimeSession:
                         t = graph.pop_ready()
                     if t is None:
                         break
-                    if t.slots > self._free["n"]:
+                    if not self._can_launch_real(t):
                         skipped.append(t)
                         continue
                     scheduled.append(t)
-                    self._free["n"] -= t.slots
-                    rt._acquire_slots(t)
-                    t.meta["dep_results"] = {
-                        d: graph.tasks[d].result for d in t.deps}
-                    t.attempts += 1
-                    t.error = None         # no stale error into a retry
-                    t.state = TaskState.RUNNING
-                    t.t_scheduled = time.perf_counter()
-                    t.meta["launch_epoch"] = t.attempts
-                    rt.journal.record(t, "scheduled", pod=rt._task_pod(t),
-                                      **_staged_extra(t))
-                    self._inflight += 1
-                    th = threading.Thread(target=self._execute_real,
-                                          args=(t,), daemon=True)
-                    self._live_attempts[(t.name, t.attempts)] = (th, t)
-                    workers.append(th)
-                    th.start()
+                    self._launch_real(t, workers)
                 for t in skipped:
                     graph.requeue(t)
                 prof.t_rts_overhead += time.perf_counter() - t0
@@ -1168,19 +1256,21 @@ class RuntimeSession:
                     # can never start and would spin this loop forever).
                     # A pending pod respawn defers the too-wide rule:
                     # the capacity is coming back.
-                    reviving = (rt.faults is not None
-                                and rt.faults.pending_revive())
+                    faults = self._fault_source()
+                    reviving = (faults is not None
+                                and faults.pending_revive())
                     for t in graph.tasks.values():
                         if t.state != TaskState.NEW:
                             continue
-                        if (t.slots > self._free["n"] and not reviving) \
+                        if (self._too_wide_real(t) and not reviving) \
                                 or any(
                                 graph.tasks[d].state.terminal
                                 and graph.tasks[d].state != TaskState.DONE
                                 for d in t.deps):
+                            tr = self._rt_for(t)
                             t.state = TaskState.CANCELED
-                            rt.journal.record(t, "canceled")
-                            rt._staging_finish(t)
+                            tr.journal.record(t, "canceled")
+                            tr._staging_finish(t)
                             self._queue_callback(t)
                     if graph.done() and not self._cbq:
                         break

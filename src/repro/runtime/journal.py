@@ -9,18 +9,43 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 import time
 from typing import Dict, Optional
 
 from repro.runtime.states import TaskGraph, TaskState
 
+# names currently claimed by OPEN journal_from_env journals in this
+# process: a second runtime asking for the same name gets a "-2" suffix
+# instead of interleaving records into the first one's file.  close()
+# releases the claim, so sequential runs (and crash-replay reopens) keep
+# the original name.
+_claimed_names: set = set()
+_claim_lock = threading.Lock()
 
-def journal_from_env(name: str) -> "Journal":
+
+def journal_from_env(name: str, tag: Optional[str] = None) -> "Journal":
     """Journal writing ``$REPRO_JOURNAL_DIR/<name>.jsonl``, or a no-op
     journal when the env var is unset — lets smoke runs opt into journal
-    capture (CI sanitizes the captured files) without new CLI flags."""
+    capture (CI sanitizes the captured files) without new CLI flags.
+
+    When several runtimes live in one process (a federated fleet, or two
+    benchmarks back to back) and ask for the same ``name`` while the first
+    journal is still open, later callers get a distinct ``<name>-<k>``
+    suffix — two pilots never write the same file.  ``tag`` stamps every
+    record with a ``pilot`` field (see :class:`Journal`)."""
     base = os.environ.get("REPRO_JOURNAL_DIR")
-    return Journal(os.path.join(base, f"{name}.jsonl") if base else None)
+    if not base:
+        return Journal(None, tag=tag)
+    with _claim_lock:
+        unique, k = name, 1
+        while unique in _claimed_names:
+            k += 1
+            unique = f"{name}-{k}"
+        _claimed_names.add(unique)
+    j = Journal(os.path.join(base, f"{unique}.jsonl"), tag=tag)
+    j._claimed_name = unique
+    return j
 
 
 class Journal:
@@ -28,9 +53,15 @@ class Journal:
     #: the live-sanitizer hook (analysis.JournalSanitizer.observe).  Also
     #: fires when ``path`` is None, so in-memory runs can be checked.
     observer = None
+    #: name claimed in _claimed_names (journal_from_env only)
+    _claimed_name: Optional[str] = None
 
-    def __init__(self, path: Optional[str]):
+    def __init__(self, path: Optional[str], *, tag: Optional[str] = None):
         self.path = path
+        #: when set (the fleet sets it to the pilot name), every record
+        #: carries ``"pilot": tag`` — the sanitizer scopes session_start
+        #: resets per pilot, and merged-journal tooling can de-interleave.
+        self.tag = tag
         self._fh = None
         if path:
             os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
@@ -45,6 +76,8 @@ class Journal:
                         self._fh.write("\n")
 
     def _emit(self, rec: dict):
+        if self.tag is not None:
+            rec.setdefault("pilot", self.tag)
         if self._fh is not None:
             self._fh.write(json.dumps(rec, default=str) + "\n")
         if self.observer is not None:
@@ -119,6 +152,10 @@ class Journal:
         if self._fh:
             self._fh.close()
             self._fh = None
+        if self._claimed_name is not None:
+            with _claim_lock:
+                _claimed_names.discard(self._claimed_name)
+            self._claimed_name = None
 
     # -------------------------------------------------------------- replay
     # attempt-terminating events whose records seed Task.history on restart

@@ -190,6 +190,11 @@ class TaskGraph:
         capacity, instead of scanning wide tasks (#widths is tiny)."""
         return min(self._width_counts) if self._width_counts else None
 
+    def frontier_slots(self) -> int:
+        """Total slot width queued in the frontier (O(#distinct widths)) —
+        the backlog signal backlog-driven recruiting keys on."""
+        return sum(w * c for w, c in self._width_counts.items())
+
     def _satisfy_waiters(self, task: Task):
         for wname in self._waiters.pop(task.name, ()):
             left = self._unmet.get(wname)

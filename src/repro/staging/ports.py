@@ -235,9 +235,13 @@ class StagingLayer:
         with self._lock:
             self.store.drop_pod_locations()
             if self.locality is not None:
+                # keep the pilot's pod-name prefix: a federated pilot that
+                # compacts must not fall back into the shared unprefixed
+                # namespace (its pods would alias another pilot's)
                 self.locality = LocalityMap(
                     n_slots=max(n_slots, 1),
-                    slots_per_pod=self.locality.slots_per_pod)
+                    slots_per_pod=self.locality.slots_per_pod,
+                    prefix=self.locality.prefix)
                 self.planner.locality = self.locality
 
     # ------------------------------------------------------------ gc
