@@ -1,0 +1,134 @@
+"""Online inference as a first-class ensemble workload.
+
+A diurnal, bursty :class:`repro.serving.TrafficModel` feeds two SLA
+classes of request batches through byte-metered Channels into
+continuous-batching decode pipelines, co-tenant with a throughput
+training ensemble on the SAME pilot:
+
+  - ``latency`` requests carry priority 10 and, with
+    ``PilotRuntime(preempt=True)``, EVICT running throughput/training
+    work instead of queueing behind it (the evicted attempt requeues
+    with a bumped epoch; its in-flight completion is an inert zombie);
+  - ``throughput`` requests and the training stages run in the slack;
+  - each class Channel declares ``capacity_bytes``: the traffic source
+    parks when too many undecoded prompt-bytes sit staged (admission
+    control by back-pressure rather than load shedding);
+  - per-class p50/p99 latency, TTFT, goodput and decode-slot occupancy
+    land in ``prof.results["serving"]``.
+
+In DES mode (``--sim``) each serve task's duration comes from
+``simulate_continuous`` — the virtual-clock cost model of the per-step
+admit/evict loop — so a whole day of traffic replays in milliseconds.
+In real mode the ``serve.decode`` kernel drives an actual jitted
+``BatchedServer`` over a tiny transformer.
+
+    PYTHONPATH=src python examples/serve_ensemble.py --sim
+    PYTHONPATH=src python examples/serve_ensemble.py          # real decode
+    PYTHONPATH=src python examples/serve_ensemble.py --validate-only
+
+Set REPRO_JOURNAL_DIR to journal the run (the CI sanitizer gate replays
+the journal's invariants with ``python -m repro.analysis sanitize``).
+"""
+import argparse
+import sys
+
+from repro.core import AppManager, Kernel, PipelineSpec, Stage, TaskSpec
+from repro.runtime.executor import PilotRuntime
+from repro.runtime.journal import journal_from_env
+from repro.serving import TrafficModel, build_serving_app
+from repro.staging import LocalityMap, StagingLayer
+
+SLOTS = 8
+WINDOWS = 8
+CAPACITY_BYTES = 64 << 10           # per-class undecoded prompt budget
+MODEL = TrafficModel(seed=11, window_s=5.0, base_rps=4.0, peak_rps=16.0,
+                     period_s=120.0, burst_prob=0.1, prompt_tokens=32,
+                     latency_new_tokens=8, throughput_new_tokens=24)
+
+
+def build(mode, prioritize=True):
+    serving, channels, metrics = build_serving_app(
+        MODEL, WINDOWS, decode_slots=4, cores=2, step_cost_s=0.02,
+        prefill_cost_s=0.05, capacity_bytes=CAPACITY_BYTES,
+        prioritize=prioritize,
+        deadlines={"latency": 8.0, "throughput": 120.0})
+
+    def bulk(c, m):
+        k = Kernel("synthetic.noop")
+        k.sim_duration = 6.0
+        return TaskSpec(k, name=f"train.c{c}.m{m}", sla="throughput")
+
+    train = PipelineSpec(
+        [Stage([bulk(c, m) for m in range(SLOTS - 2)], name=f"cycle{c}")
+         for c in range(4)], name="train")
+    return [*serving, train], channels, metrics
+
+
+def validate_only(mode) -> int:
+    """Pre-flight lint (E115/W206 live here); no task launches."""
+    from repro.analysis import validate_app
+    pipes, _, _ = build(mode)
+    staging = StagingLayer(locality=LocalityMap(SLOTS,
+                                                slots_per_pod=2))
+    rt = PilotRuntime(slots=SLOTS, mode=mode, staging=staging)
+    report = validate_app(pipes, runtime=rt)
+    print(report.format())
+    return 0 if report.ok else 1
+
+
+def main(mode):
+    staging = StagingLayer(
+        locality=LocalityMap(SLOTS, slots_per_pod=2),
+        threshold_bytes=1 << 10)
+    rt = PilotRuntime(slots=SLOTS, mode=mode, staging=staging,
+                      preempt=True,
+                      journal=journal_from_env(f"serve_ensemble_{mode}"))
+    am = AppManager(rt)
+    pipes, channels, metrics = build(mode)
+    prof = am.run(pipes, validate="error")
+    metrics.install(am, prof)
+
+    total = MODEL.total_requests(WINDOWS)
+    print(f"mode={mode}: ttc={prof.ttc:.2f}s, {prof.n_tasks} tasks, "
+          f"{total} requests, n_preempted={prof.n_preempted}")
+    s = prof.results["serving"]
+    for sla, c in sorted(s["classes"].items()):
+        print(f"  {sla:<11} n={c['n']:<4} p50={c['p50_latency_s']:.2f}s "
+              f"p99={c['p99_latency_s']:.2f}s "
+              f"ttft_p50={c['p50_ttft_s']:.2f}s "
+              f"goodput={c['goodput_tok_s']:.1f} tok/s "
+              f"occupancy={c['occupancy']:.2f}")
+    o = s["overall"]
+    print(f"  overall: {o['tokens']} tokens, "
+          f"throughput={o['throughput_tok_s']:.1f} tok/s, "
+          f"goodput={o['goodput_tok_s']:.1f} tok/s")
+    for sla, ch in channels.items():
+        print(f"  channel serve.{sla}: peak {ch.peak_unconsumed_bytes}B "
+              f"unconsumed (budget {CAPACITY_BYTES}B)")
+
+    assert prof.n_failed == 0
+    assert all(info["state"] == "done"
+               for info in prof.results["pipelines"].values())
+    assert sum(c["n"] for c in s["classes"].values()) == total
+    for ch in channels.values():
+        assert ch.peak_unconsumed_bytes <= CAPACITY_BYTES
+        assert ch.n_unconsumed() == 0
+    if mode == "sim":
+        # the co-tenant training ensemble saturates the pilot; latency
+        # arrivals must have evicted their way in rather than queueing
+        assert prof.n_preempted >= 1, \
+            "expected latency-class preemption under co-tenancy"
+    print("serving co-tenancy: ok")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sim", action="store_true",
+                    help="DES mode: virtual-clock continuous batching")
+    ap.add_argument("--validate-only", action="store_true",
+                    help="lint the declared pipelines and exit (no run)")
+    args = ap.parse_args()
+    mode = "sim" if args.sim else "real"
+    if args.validate_only:
+        sys.exit(validate_only(mode))
+    main(mode)

@@ -36,6 +36,10 @@ Static validator — federation (runtime is a repro.federation.Fleet)
         the fleet can EVER field — wider than every active pilot's
         reachable width and wider than anything the recruiter's slot
         budget could spin up.
+  E115  invalid-sla: a ``TaskSpec.sla`` names no known serving SLA class,
+        or a ``Channel(capacity_bytes=...)`` runs on a pilot with no
+        staging layer (puts carry no byte sizes, so the byte bound could
+        never engage).
 
 Static validator — warnings
   W201  channel-unconsumed: a fifo channel is produced but never consumed.
@@ -48,6 +52,10 @@ Static validator — warnings
   W205  recruiter-thrash: the recruiter's hysteresis window is shorter
         than its pilot spin-up time, so it can re-decide before the pilot
         it just ordered arrives — fleet size can oscillate.
+  W206  latency-starvation-risk: latency-class tasks are declared but no
+        task in the app has a lower effective priority — nothing is
+        preemptable, so under saturation the latency class queues exactly
+        like everything else.
 
 Journal sanitizer
   S301  epoch-regression: ``scheduled`` launch epochs not strictly
@@ -101,6 +109,8 @@ CODES = {
              "malformed inputs/outputs declaration"),
     "E114": ("fleet-slots-unsatisfiable",
              "cores request exceeds every pilot the fleet can ever field"),
+    "E115": ("invalid-sla",
+             "unknown SLA class, or capacity_bytes without a staging layer"),
     "W201": ("channel-unconsumed",
              "fifo channel produced but never consumed"),
     "W202": ("task-wider-than-pilot",
@@ -111,6 +121,8 @@ CODES = {
              "declared put exceeds byte_budget; always spills"),
     "W205": ("recruiter-thrash",
              "hysteresis shorter than pilot spin-up; size can oscillate"),
+    "W206": ("latency-starvation-risk",
+             "latency class declared but nothing lower-priority to preempt"),
     "S301": ("epoch-regression",
              "scheduled launch epochs not strictly increasing"),
     "S302": ("zombie-clobber",

@@ -34,7 +34,8 @@ Checked invariants (codes in ``diagnostics.CODES``):
         strictly increasing attempt epochs within a segment.
   S302  zombie clobber: a ``finished``/DONE record (not a speculative
         supersession) must not reuse an epoch that an abandonment record
-        (pod_lost/worker_died/heartbeat_timeout/canceled) already nulled.
+        (pod_lost/worker_died/heartbeat_timeout/canceled/preempted)
+        already nulled.
   S303  staged-ref release balance: at most one ``staged_release`` per
         task per segment, and a task whose ``scheduled`` record listed
         staged inputs must release them by its terminal record.
@@ -55,7 +56,7 @@ from typing import Dict, List, Optional, Set, Tuple
 from repro.analysis.diagnostics import DiagnosticError, Report
 
 _ABANDON_EVENTS = ("pod_lost", "worker_died", "heartbeat_timeout",
-                   "canceled")
+                   "canceled", "preempted")
 _SIM_TOL = 1e-6
 _REAL_TOL = 1e-3
 

@@ -71,17 +71,26 @@ def _spec_outputs(obj) -> Tuple[List[Channel], Optional[str]]:
 
 class _AbstractChannel:
     """Counting model of one Channel: enough state to decide every
-    availability / back-pressure question the AppManager's blocker asks,
-    pre-seeded from the live object so a second ``run()`` on one manager
-    validates against traffic the first run left behind."""
+    availability / back-pressure question the AppManager's blocker asks —
+    including the byte-denominated bound (``capacity_bytes``), mirrored
+    with per-put byte sizes — pre-seeded from the live object so a second
+    ``run()`` on one manager validates against traffic the first run left
+    behind."""
 
     def __init__(self, ch: Channel):
         self.name = ch.name
         self.mode = ch.mode
         self.capacity = ch.capacity
+        self.capacity_bytes = ch.capacity_bytes
         self.n_puts = len(ch.puts)
         self.n_taken = len(ch._taken)
         self.cursors: Dict[str, int] = dict(ch._cursors)
+        # per-put declared sizes (abstract fifo consumes in order, so the
+        # running byte totals stay exact against the declared traffic)
+        self.put_bytes: List[int] = [
+            ch._byte_prefix[i + 1] - ch._byte_prefix[i]
+            for i in range(self.n_puts)]
+        self.bytes_taken = ch._bytes_taken
 
     def available_fifo(self) -> int:
         return self.n_puts - self.n_taken
@@ -94,6 +103,13 @@ class _AbstractChannel:
             low = min(self.cursors.values()) if self.cursors else 0
             return self.n_puts - low
         return self.n_puts - self.n_taken
+
+    def n_unconsumed_bytes(self) -> int:
+        total = sum(self.put_bytes)
+        if self.mode == "broadcast":
+            low = min(self.cursors.values()) if self.cursors else 0
+            return total - sum(self.put_bytes[:low])
+        return total - self.bytes_taken
 
 
 class _AbstractRun:
@@ -157,6 +173,8 @@ def _structural_pass(report: Report, runs, seen_channels, runtime):
         for si, stage in enumerate(r.spec.stages):
             _check_stage(report, r, si, stage, seen_channels, runtime,
                          task_names)
+    _check_channel_bytes(report, seen_channels, runtime)
+    _check_sla_priorities(report, runs)
     _check_retry_policy(report, runtime)
     _check_recruiter(report, runtime)
 
@@ -190,6 +208,13 @@ def _check_stage(report, r, si, stage, seen_channels, runtime, task_names):
             report.add("E107",
                        f"kernel {k!r} matches no registered plugin "
                        f"(available: {', '.join(kernel_names())})", **tloc)
+        sla = getattr(spec, "sla", None)
+        if sla is not None:
+            from repro.serving.sla import CLASSES
+            if sla not in CLASSES:
+                report.add("E115",
+                           f"unknown SLA class {sla!r} "
+                           f"(known: {', '.join(sorted(CLASSES))})", **tloc)
         if spec.name:
             prev = task_names.get(spec.name)
             here = f"{r.name}/stage{si}"
@@ -359,6 +384,65 @@ def _check_staging(report, kernel: Optional[Kernel], runtime, loc):
                    "put will go through the spill path", **loc)
 
 
+def _check_channel_bytes(report, seen_channels, runtime):
+    """E115: a ``capacity_bytes`` bound only engages when a staging layer
+    supplies byte sizes for puts — without one, every put meters 0 bytes
+    and the declared bound silently never parks anybody."""
+    if runtime is None:
+        return
+    if getattr(runtime, "staging", None) is not None:
+        return
+    pilots = getattr(runtime, "pilots", None)
+    if pilots and any(getattr(rt, "staging", None) is not None
+                      for rt in pilots.values()):
+        return            # some pilot of the fleet meters bytes
+    for name in sorted(seen_channels):
+        ch = seen_channels[name]
+        if getattr(ch, "capacity_bytes", None) is not None:
+            report.add("E115",
+                       f"channel {name!r} declares capacity_bytes="
+                       f"{ch.capacity_bytes} but the pilot has no staging "
+                       "layer: puts carry no byte sizes, so the bound can "
+                       "never engage", channel=name)
+
+
+def _check_sla_priorities(report, runs):
+    """W206: a preempting SLA class (latency) with nothing below it.  If
+    no task in the whole app has a lower effective priority, there is
+    nothing to evict — under saturation the latency class queues exactly
+    like everything else and its deadline budget is fiction."""
+    from repro.serving.sla import CLASSES
+
+    def effective(spec) -> int:
+        if getattr(spec, "priority", None) is not None:
+            return int(spec.priority)
+        c = CLASSES.get(getattr(spec, "sla", None) or "")
+        return c.priority if c is not None else 0
+
+    preempting = []                        # (priority, loc) of latency specs
+    priorities = []
+    for r in runs:
+        for si, stage in enumerate(r.spec.stages):
+            for spec in stage.tasks:
+                p = effective(spec)
+                priorities.append(p)
+                c = CLASSES.get(getattr(spec, "sla", None) or "")
+                if c is not None and c.preempts:
+                    preempting.append(
+                        (p, {"pipeline": r.name, "stage": si,
+                             "task": spec.name or None}))
+    if not preempting:
+        return
+    floor = min(p for p, _ in preempting)
+    if all(p >= floor for p in priorities):
+        _, loc = min(preempting, key=lambda e: e[0])
+        report.add("W206",
+                   f"latency-class tasks (priority {floor}) have no "
+                   "lower-priority task anywhere in the app: nothing is "
+                   "preemptable, so under saturation the latency class "
+                   "queues like everything else", **loc)
+
+
 def _check_retry_policy(report, runtime):
     """W203: more retries than distinct pods means the pod-exclusion
     preference must repeat a previously-blamed pod on late attempts."""
@@ -475,6 +559,36 @@ def _all_outputs(stage) -> List[Channel]:
     return outs
 
 
+def _stage_emissions(stage) -> Tuple[Dict[str, int], Dict[str, int],
+                                     List[Tuple[Channel, int]]]:
+    """What this stage will put, mirrored from the AppManager: per-channel
+    put counts, per-channel declared byte totals, and the individual puts
+    in emission order (a stage-level output is ONE {task: result} put
+    carrying every member's declared bytes; a task-level output is one put
+    per spec carrying that kernel's bytes)."""
+    emits: Dict[str, int] = {}
+    emit_bytes: Dict[str, int] = {}
+    puts: List[Tuple[Channel, int]] = []
+    stage_outs, err = _spec_outputs(stage)
+    stage_nbytes = sum(
+        int(getattr(_kernel_of(s), "output_nbytes", 0) or 0)
+        for s in stage.tasks if _kernel_of(s) is not None)
+    for ch in (stage_outs if not err else []):
+        emits[ch.name] = emits.get(ch.name, 0) + 1
+        emit_bytes[ch.name] = emit_bytes.get(ch.name, 0) + stage_nbytes
+        puts.append((ch, stage_nbytes))
+    for spec in stage.tasks:
+        touts, terr = _spec_outputs(spec)
+        k = _kernel_of(spec)
+        kb = int(getattr(k, "output_nbytes", 0) or 0) if k is not None \
+            else 0
+        for ch in (touts if not terr else []):
+            emits[ch.name] = emits.get(ch.name, 0) + 1
+            emit_bytes[ch.name] = emit_bytes.get(ch.name, 0) + kb
+            puts.append((ch, kb))
+    return emits, emit_bytes, puts
+
+
 def _bindings(stage, r, si):
     """Mirror of AppManager._iter_bindings over abstract runs."""
     srcs, err = _spec_sources(stage)
@@ -519,17 +633,28 @@ def _blocker(r, stage, si, chans, stage_owner):
     for cname, n in fresh.items():
         if chans[cname].available_fifo() < n:
             return ("channel", cname)
-    emits: Dict[str, int] = {}
+    emits, emit_bytes, _puts = _stage_emissions(stage)
     for ch in _all_outputs(stage):
-        ach = chans.setdefault(ch.name, _AbstractChannel(ch))
-        emits[ch.name] = emits.get(ch.name, 0) + 1
+        chans.setdefault(ch.name, _AbstractChannel(ch))
     for cname, n_emit in emits.items():
         ach = chans[cname]
-        if ach.capacity is None:
-            continue
-        backlog = ach.n_unconsumed() - own_takes.get(cname, 0)
-        if backlog > 0 and backlog + n_emit > ach.capacity:
-            return ("channel_space", cname)
+        if ach.capacity is not None:
+            backlog = ach.n_unconsumed() - own_takes.get(cname, 0)
+            if backlog > 0 and backlog + n_emit > ach.capacity:
+                return ("channel_space", cname)
+        if ach.capacity_bytes is not None:
+            # own-take byte credit: the fifo puts this stage itself will
+            # consume drain before its emission lands (broadcast takes
+            # free no bytes — other streams may still need them)
+            credit = 0
+            if ach.mode != "broadcast":
+                lo = ach.n_taken
+                hi = min(lo + own_takes.get(cname, 0), len(ach.put_bytes))
+                credit = sum(ach.put_bytes[lo:hi])
+            backlog_b = ach.n_unconsumed_bytes() - credit
+            if backlog_b > 0 and \
+                    backlog_b + emit_bytes[cname] > ach.capacity_bytes:
+                return ("channel_space", cname)
     return None
 
 
@@ -547,7 +672,7 @@ def _advance(r, chans, stage_owner) -> bool:
         if b is not None:
             r.blocker = b
             return ran
-        # run it: consume takes, emit puts
+        # run it: consume takes (retiring their bytes), emit puts
         for ck, stream, _port, src, _j in _bindings(stage, r, nxt):
             if isinstance(src, Channel):
                 ach = chans[src.name]
@@ -555,18 +680,13 @@ def _advance(r, chans, stage_owner) -> bool:
                     cur = ach.cursors.get(stream, 0)
                     ach.cursors[stream] = cur + 1
                 else:
+                    if ach.n_taken < len(ach.put_bytes):
+                        ach.bytes_taken += ach.put_bytes[ach.n_taken]
                     ach.n_taken += 1
-        n_task_outs = {}
-        stage_outs, err = _spec_outputs(stage)
-        for ch in (stage_outs if not err else []):
-            n_task_outs[ch.name] = n_task_outs.get(ch.name, 0) + 1
-        for spec in stage.tasks:
-            touts, terr = _spec_outputs(spec)
-            for ch in (touts if not terr else []):
-                n_task_outs[ch.name] = n_task_outs.get(ch.name, 0) \
-                    + 1
-        for cname, n in n_task_outs.items():
-            chans[cname].n_puts += n
+        for ch, nbytes in _stage_emissions(stage)[2]:
+            ach = chans.setdefault(ch.name, _AbstractChannel(ch))
+            ach.n_puts += 1
+            ach.put_bytes.append(nbytes)
         r.idx = nxt
         r.blocker = None
         ran = True

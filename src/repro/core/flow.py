@@ -105,10 +105,20 @@ class Channel:
     pipeline whose next stage would put onto a channel already holding
     ``capacity`` unconsumed puts, and wakes it on the next take (default
     None: unbounded, the historical behavior).
+
+    ``capacity_bytes`` is the byte-denominated variant: each put carries a
+    payload size (the AppManager passes the staged-ref ``nbytes``, or the
+    producing kernels' declared ``output_nbytes`` in DES mode) and a
+    producer parks while the channel's *unconsumed* bytes plus its next
+    emission would exceed the budget.  This is what bounds staged-blob
+    memory for streaming workloads (serving traffic windows) where put
+    COUNT says nothing about footprint.  Both limits may be set; either
+    parks the producer.
     """
 
     def __init__(self, name: str, dtype: Optional[type] = None, *,
-                 capacity: Optional[int] = None, mode: str = "fifo"):
+                 capacity: Optional[int] = None,
+                 capacity_bytes: Optional[int] = None, mode: str = "fifo"):
         if not name:
             raise ValueError("channel needs a non-empty name")
         if mode not in ("fifo", "broadcast"):
@@ -116,9 +126,12 @@ class Channel:
                              f"got {mode!r}")
         if capacity is not None and capacity < 1:
             raise ValueError("channel capacity must be >= 1")
+        if capacity_bytes is not None and capacity_bytes < 1:
+            raise ValueError("channel capacity_bytes must be >= 1")
         self.name = name
         self.dtype = dtype
         self.capacity = capacity
+        self.capacity_bytes = capacity_bytes
         self.mode = mode
         self.puts: List[Tuple[str, Any]] = []   # (producer_key, value)
         self._index: Dict[str, int] = {}        # producer_key -> put index
@@ -129,6 +142,12 @@ class Channel:
         self._reserved: Dict[str, str] = {}
         # broadcast: consumer stream -> index of its next unread put
         self._cursors: Dict[str, int] = {}
+        # byte accounting: per-put payload sizes as a prefix-sum (O(1)
+        # unconsumed-bytes queries), bytes retired by fifo takes, and the
+        # high-water mark the serving bench asserts against the budget
+        self._byte_prefix: List[int] = [0]      # prefix[i] = bytes of puts[:i]
+        self._bytes_taken = 0
+        self.peak_unconsumed_bytes = 0
 
     @property
     def port(self) -> Port:
@@ -152,10 +171,13 @@ class Channel:
                     f"results, got {type(r).__name__}")
 
     def put(self, producer_key: str, value: Any, *,
-            task_level: bool = False, check: bool = True) -> int:
+            task_level: bool = False, check: bool = True,
+            nbytes: int = 0) -> int:
         """``check=False`` skips the dtype check — the AppManager passes it
         in DES (sim) mode, where tasks run nothing and every result is
-        None, so a typed channel would reject the placeholder payloads."""
+        None, so a typed channel would reject the placeholder payloads.
+        ``nbytes`` is the payload size charged against ``capacity_bytes``
+        (0 = untracked put)."""
         if producer_key in self._index:
             raise ValueError(f"channel {self.name!r}: duplicate put from "
                              f"{producer_key!r}")
@@ -163,6 +185,9 @@ class Channel:
             self.check(value, task_level=task_level)
         self._index[producer_key] = len(self.puts)
         self.puts.append((producer_key, value))
+        self._byte_prefix.append(self._byte_prefix[-1] + max(int(nbytes), 0))
+        self.peak_unconsumed_bytes = max(self.peak_unconsumed_bytes,
+                                         self.n_unconsumed_bytes())
         return self._index[producer_key]
 
     def has_put(self, producer_key: str) -> bool:
@@ -205,6 +230,16 @@ class Channel:
                                      if self._cursors else 0)
         return len(self.puts) - len(self._taken)
 
+    def n_unconsumed_bytes(self) -> int:
+        """Payload bytes nobody has consumed yet — the byte-denominated
+        back-pressure signal ``capacity_bytes`` parks producers on.
+        Broadcast counts from the SLOWEST registered stream's cursor (a
+        put's bytes are retained until every stream is past it)."""
+        if self.mode == "broadcast":
+            lo = min(self._cursors.values()) if self._cursors else 0
+            return self._byte_prefix[-1] - self._byte_prefix[lo]
+        return self._byte_prefix[-1] - self._bytes_taken
+
     def take(self, consumer_key: str, producer_key: Optional[str] = None,
              stream: Optional[str] = None) -> Tuple[str, Any]:
         """Consume one put: the journaled producer when replaying, else the
@@ -236,6 +271,8 @@ class Channel:
             if idx is None:
                 raise LookupError(f"channel {self.name!r}: no put available")
         self._taken.add(idx)
+        self._bytes_taken += \
+            self._byte_prefix[idx + 1] - self._byte_prefix[idx]
         return self.puts[idx]
 
     def __repr__(self):

@@ -87,6 +87,7 @@ class ExecutionProfile:
     n_retries: int = 0
     n_speculative: int = 0
     n_pod_lost: int = 0     # attempts lost to pod/worker failure
+    n_preempted: int = 0    # attempts evicted for higher-priority work
     # busy slot-seconds accumulate here so utilization can be computed over
     # the WHOLE run at the end (not overwritten per cycle — that bug made
     # RE/SAL report only the last cycle's utilization)
@@ -142,6 +143,14 @@ class TaskSpec:
     to each task's pod between ``pop_ready`` and launch, and delivered as
     ``ctx["staged_inputs"]``; every move is charged to ``t_data``.
     Without staging the kernel handles its own lists, exactly as before.
+
+    ``sla`` names a serving SLA class (``latency`` | ``throughput``, see
+    repro/serving/sla.py); an unknown name is rejected with diagnostic
+    E115.  The class supplies the frontier ``priority`` (overridable
+    explicitly) and a default ``deadline`` budget in seconds; both land on
+    the Task (``task.priority`` / ``task.meta["deadline"]``) so the
+    scheduler orders — and, with ``PilotRuntime(preempt=True)``, preempts —
+    by them.
     """
     kernel: Union[Kernel, str]
     name: str = ""
@@ -150,6 +159,9 @@ class TaskSpec:
     outputs: Any = None
     stage_in: Any = None
     stage_out: Any = None
+    sla: Optional[str] = None
+    priority: Optional[int] = None
+    deadline: Optional[float] = None
 
     def __post_init__(self):
         if isinstance(self.kernel, str):
@@ -369,13 +381,20 @@ class AppManager:
         port_deps = self._bind_task_ports(spec, pr, name, stage_idx, j)
         all_deps = list(dict.fromkeys(
             [*deps, *stage._port_deps, *port_deps]))
+        # deferred import: repro.serving sits above core in the layering
+        from repro.serving.sla import resolve_sla
+        priority, deadline = resolve_sla(spec)
         t = Task(name=name, run=self._make_run(k, stage),
                  duration=(k.sim_duration or 0.0), slots=k.cores,
                  deps=all_deps, stage=stage_label,
                  instance=int(spec.metadata.get("instance", j)),
                  iteration=int(spec.metadata.get("iteration", 0)),
-                 idempotent=k.idempotent)
+                 idempotent=k.idempotent, priority=priority)
         t.meta["pipeline"] = pr.name
+        if spec.sla is not None:
+            t.meta["sla"] = spec.sla
+        if deadline is not None:
+            t.meta["deadline"] = deadline
         extra = {kk: v for kk, v in spec.metadata.items()
                  if kk not in ("instance", "iteration")}
         if extra:
@@ -398,6 +417,18 @@ class AppManager:
         self._ensure_flow_loaded()
         cur = self.channels.get(ch.name)
         if cur is None:
+            if ch.capacity_bytes is not None and self.staging is None:
+                # byte budgets meter *staged* payload bytes; without a
+                # staging layer no put carries a size and the budget would
+                # silently never park anyone
+                from repro.analysis.diagnostics import (Diagnostic,
+                                                        DiagnosticError)
+                raise DiagnosticError([Diagnostic(
+                    "E115",
+                    f"channel {ch.name!r} declares capacity_bytes="
+                    f"{ch.capacity_bytes} but the pilot has no staging "
+                    "layer (PilotRuntime(staging=StagingLayer(...))) — "
+                    "puts carry no byte sizes to meter")])
             self.channels[ch.name] = ch
             # reserve journaled put->consumer bindings so a replayed take
             # always re-binds to ITS producer, never a FIFO steal
@@ -421,12 +452,6 @@ class AppManager:
             for port, src in flow.normalize_sources(spec.inputs).items():
                 yield (f"{pr.name}:{idx:04d}:{j:05d}:{port}",
                        f"{pr.name}:{j:05d}:{port}", port, src, j)
-
-    def _stage_output_channels(self, stage: Stage) -> List[Channel]:
-        outs = list(flow.normalize_outputs(stage.outputs))
-        for spec in stage.tasks:
-            outs.extend(flow.normalize_outputs(spec.outputs))
-        return outs
 
     def _input_blocker(self, stage: Stage, pr: _PipelineRun, idx: int):
         """First unsatisfiable input — or full output channel
@@ -464,25 +489,61 @@ class AppManager:
             if self.channels[cname].n_available("") < n:
                 return (("channel", cname), f"channel:{cname}")
         # back-pressure: park the producer when admitting this stage would
-        # leave the channel above `capacity` unconsumed puts, counting the
-        # puts the stage itself will emit (a stage of N task-level outputs
-        # bursts N puts between blocker checks).  Two carve-outs keep
-        # progress: the stage's OWN takes from that channel are credited
-        # (a feedback stage consuming and producing one bounded channel
-        # must not deadlock on itself), and a fully drained channel always
-        # admits one stage even when its burst alone exceeds capacity.
+        # leave the channel above `capacity` unconsumed puts — or above
+        # `capacity_bytes` unconsumed payload bytes — counting what the
+        # stage itself will emit (a stage of N task-level outputs bursts
+        # N puts between blocker checks; emitted bytes come from the
+        # kernels' declared output_nbytes, resolved before this runs).
+        # Two carve-outs keep progress: the stage's OWN takes from that
+        # channel are credited (a feedback stage consuming and producing
+        # one bounded channel must not deadlock on itself), and a fully
+        # drained channel always admits one stage even when its burst
+        # alone exceeds the limit.
         emits: Dict[str, int] = {}
-        for ch in self._stage_output_channels(stage):
+        emit_bytes: Dict[str, int] = {}
+        stage_nbytes = sum(int(getattr(s.kernel, "output_nbytes", 0) or 0)
+                           for s in stage.tasks)
+        for ch in flow.normalize_outputs(stage.outputs):
             self._register_channel(ch)
             emits[ch.name] = emits.get(ch.name, 0) + 1
+            emit_bytes[ch.name] = emit_bytes.get(ch.name, 0) + stage_nbytes
+        for s in stage.tasks:
+            for ch in flow.normalize_outputs(s.outputs):
+                self._register_channel(ch)
+                emits[ch.name] = emits.get(ch.name, 0) + 1
+                emit_bytes[ch.name] = emit_bytes.get(ch.name, 0) + \
+                    int(getattr(s.kernel, "output_nbytes", 0) or 0)
         for name, n_emit in emits.items():
             ch = self.channels[name]
-            if ch.capacity is None:
-                continue
-            backlog = ch.n_unconsumed() - own_takes.get(name, 0)
-            if backlog > 0 and backlog + n_emit > ch.capacity:
-                return (("channel_space", name), f"channel_space:{name}")
+            if ch.capacity is not None:
+                backlog = ch.n_unconsumed() - own_takes.get(name, 0)
+                if backlog > 0 and backlog + n_emit > ch.capacity:
+                    return (("channel_space", name),
+                            f"channel_space:{name}")
+            if ch.capacity_bytes is not None:
+                credit = self._own_take_byte_credit(
+                    ch, own_takes.get(name, 0))
+                backlog_b = ch.n_unconsumed_bytes() - credit
+                if backlog_b > 0 and \
+                        backlog_b + emit_bytes[name] > ch.capacity_bytes:
+                    return (("channel_space", name),
+                            f"channel_space:{name}")
         return None
+
+    @staticmethod
+    def _own_take_byte_credit(ch: Channel, n_takes: int) -> int:
+        """Bytes of the puts this stage's own takes are about to retire
+        (fifo binds the oldest candidates) — credited against the byte
+        backlog so a self-feeding stage cannot park on its own input."""
+        if n_takes <= 0 or ch.mode == "broadcast":
+            return 0
+        credit = 0
+        for idx in ch._fifo_candidates(""):
+            credit += ch._byte_prefix[idx + 1] - ch._byte_prefix[idx]
+            n_takes -= 1
+            if n_takes == 0:
+                break
+        return credit
 
     def _take(self, ch: Channel, ck: str, stream: Optional[str] = None,
               n_consumers: int = 1) -> Any:
@@ -608,7 +669,8 @@ class AppManager:
                     value = ref
         is_ref = isinstance(value, StagedRef)
         ch.put(pk, value, task_level=task_level,
-               check=check and not is_ref)
+               check=check and not is_ref,
+               nbytes=value.nbytes if is_ref else int(nbytes_hint or 0))
         # a journaled ref is only replayable when its payload outlives the
         # process: a write-through spill file (real mode) or virtual-ref
         # metadata (sim).  Otherwise journal the payload itself, so a
@@ -684,7 +746,17 @@ class AppManager:
         stage/task location — at submit time, before any task of the
         stage (or of a stage parked behind it) launches."""
         from repro.core.kernel_plugin import kernel_registered
+        from repro.serving.sla import CLASSES
         for j, spec in enumerate(stage.tasks):
+            if spec.sla is not None and spec.sla not in CLASSES:
+                from repro.analysis.diagnostics import (Diagnostic,
+                                                        DiagnosticError)
+                raise DiagnosticError([Diagnostic(
+                    "E115",
+                    f"unknown SLA class {spec.sla!r} (known: "
+                    f"{', '.join(sorted(CLASSES))})",
+                    pipeline=pr.name, stage=idx,
+                    task=spec.name or f"{stage.name or idx}[{j}]")])
             if not isinstance(spec.kernel, str):
                 continue
             kname = spec.kernel
@@ -917,6 +989,7 @@ class AppManager:
         prof.n_retries += rp.n_retries
         prof.n_speculative += rp.n_speculative
         prof.n_pod_lost += rp.n_pod_lost
+        prof.n_preempted += rp.n_preempted
         prof.slot_busy += rp.slot_busy
         # utilization over the WHOLE session: busy slot-seconds / available
         # slot-seconds (accumulated, then computed once — not per cycle)

@@ -32,7 +32,7 @@ from typing import Dict, List, Optional
 
 from repro.federation.fleet import Fleet, _FaultUnion
 from repro.runtime.executor import PilotRuntime, RuntimeSession
-from repro.runtime.states import Task
+from repro.runtime.states import Task, TaskState
 from repro.staging.store import HOST
 
 
@@ -229,8 +229,56 @@ class FederatedSession(RuntimeSession):
                 best, best_key = name, key
         return best
 
+    # ---------------------------------------------------------- preemption
+    # Per-pilot variants of the base session's preemption: capacity is a
+    # per-pilot account here, so the deficit arithmetic and the victim
+    # pool are scoped to one pilot, and a successful eviction binds the
+    # high-priority task to the pilot it made room on.
+
+    def _preempt_enabled(self, t: Task) -> bool:
+        return t.priority > 0 and any(
+            rt.preempt for rt in self.fleet.active().values())
+
+    def _preempt_sim_for(self, t: Task) -> bool:
+        for name, rt in self.fleet.active().items():
+            if not rt.preempt or t.slots > rt.slots:
+                continue
+            need = t.slots - (rt.slots - self._busy_by.get(name, 0))
+            victims = [] if need <= 0 else self._preempt_victims(
+                t, need, [v for v in self._sim_running_tasks()
+                          if v.meta.get("pilot") == name])
+            if victims is None:
+                continue
+            for v in victims:
+                self._preempt_sim(v)
+            t.meta["pilot"] = name     # bind to the pilot we made room on
+            return True
+        return False
+
+    def _preempt_real_for(self, t: Task) -> bool:
+        for name, rt in self.fleet.active().items():
+            if not rt.preempt or t.slots > rt.slots:
+                continue
+            need = t.slots - self._free_by.get(name, 0)
+            victims = [] if need <= 0 else self._preempt_victims(
+                t, need,
+                [v for (_, epoch), (_th, v) in self._live_attempts.items()
+                 if v.meta.get("launch_epoch") == epoch
+                 and v.state == TaskState.RUNNING
+                 and v.meta.get("pilot") == name])
+            if victims is None:
+                continue
+            for v in victims:
+                self._preempt_real(v)
+            return True              # _can_launch_real re-dispatches
+        return False
+
     def _schedule_sim(self):
         graph = self.graph
+        if any(rt.preempt for rt in self.fleet.active().values()):
+            # before the min-width gate: a saturated fleet is exactly
+            # when a latency task needs the eviction path
+            self._preempt_pass_sim()
         active = self.fleet.active()
         free = {n: rt.slots - self._busy_by.get(n, 0)
                 for n, rt in active.items()}

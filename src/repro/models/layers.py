@@ -216,15 +216,21 @@ def _decode_attention(cfg: ModelConfig, q, kc, vc, mask):
 
 def attn_decode(cfg: ModelConfig, p: Params, x, cache: Params, positions,
                 *, kind: str, mesh=None) -> Tuple[jax.Array, Params]:
-    """x: (B,1,D); positions: (B,) (batch-synchronized: positions[0] used
-    for cache indexing).  Returns (out (B,1,D), updated cache)."""
+    """x: (B,1,D); positions: (B,) — PER-ROW cache positions: each batch
+    row writes its k/v at its own offset and attends under its own causal
+    mask, so a continuous-batching server can admit requests into a live
+    decode wave at unequal sequence offsets.  Sliding-window local layers
+    remain batch-synchronized (positions[0]): their ring cache carries one
+    shared ``pos`` vector with no batch dimension.  When all rows share a
+    position the per-row path is numerically identical to the old
+    synchronized one.  Returns (out (B,1,D), updated cache)."""
     B = x.shape[0]
-    pos = positions[0]
     q, k, v = _qkv(cfg, p, x, positions[:, None], kind)
 
     if kind == "cross":
         raise ValueError("use attn_decode_cross")
     if kind == "local" and cfg.sliding_window:
+        pos = positions[0]               # ring cache: batch-synchronized
         W = cache["k"].shape[1]
         slot = pos % W
         kc = lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
@@ -236,10 +242,12 @@ def attn_decode(cfg: ModelConfig, p: Params, x, cache: Params, positions,
         out = _decode_attention(cfg, q, kc, vc, mask)
         new_cache = {"k": kc, "v": vc, "pos": pc}
     else:
-        kc = lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
-        vc = lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
+        write = jax.vmap(lambda c, u, pp:
+                         lax.dynamic_update_slice_in_dim(c, u, pp, axis=0))
+        kc = write(cache["k"], k, positions)
+        vc = write(cache["v"], v, positions)
         S = kc.shape[1]
-        mask = jnp.broadcast_to((jnp.arange(S) <= pos)[None, :], (B, S))
+        mask = jnp.arange(S)[None, :] <= positions[:, None]
         out = _decode_attention(cfg, q, kc, vc, mask)
         new_cache = {"k": kc, "v": vc}
     return out @ cast(cfg, p["wo"]), new_cache

@@ -387,7 +387,10 @@ def forward(cfg: ModelConfig, params: Params, tokens, *, positions=None,
 
 def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens,
                 positions, *, mesh=None):
-    """One token for the whole batch.  tokens: (B,1); positions: (B,).
+    """One token for the whole batch.  tokens: (B,1); positions: (B,) —
+    per-row offsets: rows may sit at different sequence positions (see
+    layers.attn_decode), which is what lets the continuous-batching server
+    admit a freshly prefilled request into a running decode wave.
     Returns (logits (B,1,V), new cache)."""
     B = tokens.shape[0]
     h = embed_tokens(cfg, params, tokens, positions[:, None])

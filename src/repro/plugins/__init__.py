@@ -1,5 +1,6 @@
 """Kernel plugin registry: importing this package registers all plugins."""
 from repro.plugins import lm           # noqa: F401
 from repro.plugins import re_exchange  # noqa: F401
+from repro.plugins import serve        # noqa: F401
 from repro.plugins import synthetic    # noqa: F401
 from repro.plugins import toy          # noqa: F401

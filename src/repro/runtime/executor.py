@@ -97,6 +97,7 @@ class RuntimeProfile:
     n_retries: int = 0
     n_speculative: int = 0
     n_pod_lost: int = 0                # attempts lost to pod/worker failure
+    n_preempted: int = 0               # attempts evicted for higher priority
     slot_busy: float = 0.0             # aggregate busy slot-seconds
     events: List[Dict[str, Any]] = field(default_factory=list)
 
@@ -116,6 +117,7 @@ class PilotRuntime:
                  straggler_factor: float = 0.0,
                  min_straggler_samples: int = 5,
                  sanitize: bool = False,
+                 preempt: bool = False,
                  on_schedule: Optional[Callable] = None):
         assert mode in ("real", "sim")
         if slots is None:
@@ -167,6 +169,12 @@ class PilotRuntime:
         self._dead_pod_ids: Dict[str, List[int]] = {}
         self._drop_pending = False
         self.max_retries = max_retries
+        # priority preemption: a ready task with priority > 0 that cannot
+        # fit may evict RUNNING lower-priority idempotent tasks through
+        # the abandon/requeue path (epoch-stamped — the completion of a
+        # preempted attempt is an inert zombie).  Preemption is not a
+        # failure: it neither blames the pod nor consumes retry budget.
+        self.preempt = preempt
         self.straggler_factor = straggler_factor
         self.min_straggler_samples = min_straggler_samples
         # called as on_schedule(runtime, graph, vnow) before every
@@ -715,6 +723,11 @@ class RuntimeSession:
 
     def _schedule_sim(self):
         rt, graph = self.rt, self.graph
+        if rt.preempt:
+            # high-priority head of line first: with the pilot saturated
+            # by throughput work, the locality pass below would not even
+            # pop a latency task (avail == 0)
+            self._preempt_pass_sim()
         if rt.staging is not None:
             # locality-ordered pass: tasks whose staged inputs already
             # have a replica in a free pod run first (they link instead
@@ -863,6 +876,92 @@ class RuntimeSession:
             rt._staging_finish(t)
             prof.t_data += t.t_data
             self._queue_callback(t)
+
+    # ------------------------------------------------------- preemption
+    # A ready high-priority task (serving's `latency` SLA class) that
+    # cannot fit may evict running lower-priority idempotent attempts.
+    # Eviction IS the abandon path: invalidate the launch epoch (the
+    # in-flight completion becomes an inert zombie), free capacity,
+    # record the attempt, requeue as NEW.  Unlike a pod failure it never
+    # blames the pod (excluded_pods ignores "preempted") and never
+    # consumes retry budget — a throughput task preempted N times still
+    # has its full max_retries for real failures.
+
+    def _preempt_enabled(self, t: Task) -> bool:
+        """Gate for one preemption attempt on behalf of ready task ``t``
+        (federation overrides: per-pilot capacity accounts need their own
+        victim arithmetic)."""
+        return self.rt.preempt and t.priority > 0
+
+    def _preempt_victims(self, t: Task, need: int,
+                         running) -> Optional[List[Task]]:
+        """Pick victims freeing >= ``need`` slots for ``t``: strictly
+        lower priority, idempotent, not speculation-involved.  Least
+        work lost first (latest v_started).  None when the eligible pool
+        cannot cover the deficit — then nothing is evicted."""
+        cands = [v for v in running
+                 if (v.priority < t.priority and v.idempotent
+                     and v.speculative_of is None
+                     and v.name not in self._spec_launched)]
+        cands.sort(key=lambda v: (v.priority, -v.v_started, v.tid))
+        chosen, freed = [], 0
+        for v in cands:
+            chosen.append(v)
+            freed += v.slots
+            if freed >= need:
+                return chosen
+        return None
+
+    def _sim_running_tasks(self) -> List[Task]:
+        return [v for _, _, epoch, v in self._heap
+                if v.meta.get("launch_epoch") == epoch
+                and v.state == TaskState.RUNNING]
+
+    def _preempt_sim_for(self, t: Task) -> bool:
+        """Free enough sim capacity for ``t`` by eviction; True when
+        ``t`` fits afterwards (possibly without evicting anything)."""
+        need = t.slots - (self.rt.slots - self._busy)
+        if need <= 0:
+            return True
+        victims = self._preempt_victims(t, need, self._sim_running_tasks())
+        if victims is None:
+            return False
+        for v in victims:
+            self._preempt_sim(v)
+        return True
+
+    def _preempt_sim(self, v: Task):
+        """Evict one running sim attempt (mirror of :meth:`_abandon_sim`
+        minus the failure semantics)."""
+        rt, prof = self._rt_for(v), self.prof
+        v.meta["launch_epoch"] = None
+        self._vacate(v)
+        rt._release_slots(v)
+        v.record_attempt("preempted", pod=rt._task_pod(v))
+        prof.n_preempted += 1
+        rt.journal.record(v, "preempted", pod=rt._task_pod(v))
+        v.meta.pop("slot_ids", None)
+        v.meta.pop("slots_released", None)
+        v.error = None
+        v.state = TaskState.NEW        # always requeues: not a failure
+
+    def _preempt_pass_sim(self):
+        """Launch ready high-priority tasks, evicting for the ones that
+        do not fit; runs before the normal scheduling pass so a latency
+        task never waits behind a full pilot of throughput work."""
+        graph = self.graph
+        while True:
+            t = graph.pop_ready()      # priority order: head is hottest
+            if t is None:
+                return
+            if not self._preempt_enabled(t):
+                graph.requeue(t)
+                return
+            if self._preempt_sim_for(t):
+                self._launch_sim(t)
+                continue
+            graph.requeue(t)           # nothing evictable: wait in line
+            return
 
     def _drain_sim(self):
         rt, graph, prof = self.rt, self.graph, self.prof
@@ -1091,6 +1190,44 @@ class RuntimeSession:
             rt._staging_finish(t)
             self._queue_callback(t)
 
+    def _preempt_real_for(self, t: Task) -> bool:
+        """Real-mode eviction on behalf of ready ``t`` (caller holds the
+        session cv).  The victim's worker thread cannot be stopped:
+        popping its live-attempt entry turns the eventual completion into
+        a zombie, exactly as the failure paths do."""
+        need = t.slots - self._free["n"]
+        if need <= 0:
+            return True
+        running = [v for (_, epoch), (_th, v) in self._live_attempts.items()
+                   if v.meta.get("launch_epoch") == epoch
+                   and v.state == TaskState.RUNNING]
+        victims = self._preempt_victims(t, need, running)
+        if victims is None:
+            return False
+        for v in victims:
+            self._preempt_real(v)
+        return True
+
+    def _preempt_real(self, v: Task):
+        """Evict one running real attempt (mirror of :meth:`_abandon_real`
+        minus the failure semantics)."""
+        rt, prof = self._rt_for(v), self.prof
+        entry = self._live_attempts.pop((v.name, v.meta.get("launch_epoch")),
+                                        None)
+        if entry is not None:
+            self._zombie_threads.add(entry[0])
+        v.meta["launch_epoch"] = None
+        self._inflight -= 1
+        self._credit_free(v)
+        rt._release_slots(v)
+        v.record_attempt("preempted", pod=rt._task_pod(v))
+        prof.n_preempted += 1
+        rt.journal.record(v, "preempted", pod=rt._task_pod(v))
+        v.meta.pop("slot_ids", None)
+        v.meta.pop("slots_released", None)
+        v.error = None
+        v.state = TaskState.NEW        # always requeues: not a failure
+
     def _execute_real(self, t: Task):
         rt, prof, cv = self._rt_for(t), self.prof, self._cv
         epoch = t.meta.get("launch_epoch")
@@ -1234,11 +1371,27 @@ class RuntimeSession:
                     else:
                         min_w = graph.frontier_min_width()
                         if min_w is None or min_w > self._free["n"]:
-                            break
+                            t = None
+                        else:
+                            t = graph.pop_ready()
+                    if t is None and getattr(rt, "preempt", False):
+                        # the width/locality early-exit must not hide a
+                        # ready high-priority task wider than the free
+                        # slots — that is exactly the case eviction
+                        # (PilotRuntime(preempt=True)) exists for
                         t = graph.pop_ready()
+                        if t is not None and not self._preempt_enabled(t):
+                            graph.requeue(t)
+                            t = None
                     if t is None:
                         break
                     if not self._can_launch_real(t):
+                        if self._preempt_enabled(t) \
+                                and self._preempt_real_for(t) \
+                                and self._can_launch_real(t):
+                            scheduled.append(t)
+                            self._launch_real(t, workers)
+                            continue
                         skipped.append(t)
                         continue
                     scheduled.append(t)

@@ -159,8 +159,11 @@ class Journal:
 
     # -------------------------------------------------------------- replay
     # attempt-terminating events whose records seed Task.history on restart
+    # ("preempted" is an eviction, not a failure — it still counts an
+    # attempt, so a restart resumes with the right epoch numbering, but
+    # faults.FAILED_OUTCOMES excludes it: no pod blame)
     _ATTEMPT_EVENTS = ("failed", "pod_lost", "worker_died",
-                       "heartbeat_timeout")
+                       "heartbeat_timeout", "preempted")
 
     def load_state(self):
         """Parse the journal once: ``(done, results, history)``.

@@ -2,7 +2,9 @@
 
 The TaskGraph maintains its ready frontier *incrementally*: every task keeps
 a count of unmet (not-DONE) dependencies and the graph keeps a min-heap of
-ready task names keyed by tid.  State transitions are observed through the
+ready task names keyed by (-priority, tid): higher-priority tasks (e.g. the
+serving ``latency`` SLA class) pop before lower ones, FIFO within a
+priority level.  State transitions are observed through the
 ``Task.state`` descriptor, so any ``t.state = ...`` write — scheduler,
 journal replay, speculative supersession — updates the frontier in O(log f)
 (f = frontier size) instead of the per-event full scan the seed used, which
@@ -51,6 +53,11 @@ class Task:
     instance: int = 0
     iteration: int = 0
     idempotent: bool = True       # eligible for speculative re-execution
+    # frontier ordering: higher pops first; ties break on tid (FIFO).
+    # Serving SLA classes map onto this (latency > throughput), and the
+    # executor may preempt a running lower-priority task for a ready
+    # higher-priority one (see PilotRuntime(preempt=True)).
+    priority: int = 0
     meta: Dict[str, Any] = field(default_factory=dict)
 
     tid: str = field(default_factory=lambda: f"t{next(_tid_counter):06d}")
@@ -81,7 +88,7 @@ class Task:
                        error: Optional[str] = None) -> Dict[str, Any]:
         """Append one attempt record to :attr:`history` (outcome in
         done|failed|pod_lost|worker_died|heartbeat_timeout|superseded|
-        canceled)."""
+        canceled|preempted)."""
         rec = {"attempt": self.attempts, "pod": pod,
                "slot_ids": list(self.meta.get("slot_ids", ())),
                "outcome": outcome}
@@ -133,7 +140,7 @@ class TaskGraph:
         self._unmet: Dict[str, int] = {}       # name -> deps not yet DONE
         self._waiters: Dict[str, List[str]] = {}   # dep name -> dependents
         self._in_frontier: set = set()
-        self._heap: List = []                  # (tid, name), lazily pruned
+        self._heap: List = []    # (-priority, tid, name), lazily pruned
         self._width_counts: Dict[int, int] = {}    # slots -> frontier count
         self._n_terminal = 0
         for t in list(self.tasks.values()):    # pre-populated dict support
@@ -170,7 +177,8 @@ class TaskGraph:
     def _frontier_add(self, task: Task):
         if task.name not in self._in_frontier:
             self._in_frontier.add(task.name)
-            heapq.heappush(self._heap, (task.tid, task.name))
+            heapq.heappush(self._heap,
+                           (-task.priority, task.tid, task.name))
             w = task.slots
             self._width_counts[w] = self._width_counts.get(w, 0) + 1
 
@@ -222,10 +230,11 @@ class TaskGraph:
             self._satisfy_waiters(task)
 
     def pop_ready(self) -> Optional[Task]:
-        """Lowest-tid ready task, removed from the frontier (the caller
-        either schedules it or gives it back via :meth:`requeue`)."""
+        """Highest-priority ready task (ties: lowest tid), removed from the
+        frontier (the caller either schedules it or gives it back via
+        :meth:`requeue`)."""
         while self._heap:
-            tid, name = self._heap[0]
+            name = self._heap[0][2]
             if name not in self._in_frontier:   # stale entry: lazily prune
                 heapq.heappop(self._heap)
                 continue
@@ -265,10 +274,11 @@ class TaskGraph:
             raise ValueError("task graph has a cycle")
 
     def ready(self) -> List[Task]:
-        """Snapshot of the frontier in tid order (O(f log f), f = frontier
-        size — NOT O(n); kept for inspection/back-compat)."""
+        """Snapshot of the frontier in pop order — priority desc, then tid
+        (O(f log f), f = frontier size — NOT O(n); kept for
+        inspection/back-compat)."""
         return sorted((self.tasks[n] for n in self._in_frontier),
-                      key=lambda t: t.tid)
+                      key=lambda t: (-t.priority, t.tid))
 
     def done(self) -> bool:
         return self._n_terminal == len(self.tasks)

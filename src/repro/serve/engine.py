@@ -1,6 +1,7 @@
 """Serving substrate: prefill/decode step builders, cache specs, and a
-host-side batched-request scheduler (continuous-batching-lite) used by the
-serving example and the ensemble serving plugins.
+host-side continuous-batching scheduler (per-step admit/evict over a live
+decode wave) used by the serving example and the ensemble serving plugins
+(repro.serving builds whole PST applications on top of it).
 """
 from __future__ import annotations
 
@@ -52,21 +53,52 @@ class Request:
     out_tokens: List[int] = field(default_factory=list)
     submitted_at: float = 0.0
     done_at: float = 0.0
+    sla: str = "throughput"          # serving SLA class (repro.serving.sla)
+
+
+def _merge_rows(old, new, mask, *, axis):
+    """Select ``new``'s batch rows where ``mask`` is set, ``old``'s
+    elsewhere, for every leaf of a cache subtree (``axis`` is the batch
+    axis: 1 for the scanned ``blocks`` subtree, 0 for ``tail``)."""
+    def sel(o, n):
+        shape = [1] * o.ndim
+        shape[axis] = o.shape[axis]
+        return jnp.where(mask.reshape(shape), n, o)
+    return jax.tree_util.tree_map(sel, old, new)
 
 
 class BatchedServer:
-    """Host-side batched serving loop over fixed-size decode slots.
+    """Host-side continuous-batching server over fixed decode slots.
 
-    Greedy decoding over synchronized batch positions (slot-parallel).  This
-    is the serving driver used by examples/serve_batched.py; the ensemble
-    layer schedules *many* of these as tasks.
+    ``run()`` keeps ONE decode wave alive for the whole queue: each step it
+    (1) admits queued requests into free slots — group prefill, then merge
+    only the joiner rows into the live cache — (2) decodes one token for
+    every occupied slot at its own per-row cache position, and (3) evicts
+    each request the step it reaches its ``max_new_tokens``, freeing the
+    slot for the next admission.  Per-row positions come from
+    ``models.layers.attn_decode``; sliding-window local layers keep a
+    batch-synchronized ring cache (one position vector, no batch dim), so
+    configs containing them fall back to the legacy synchronized-wave loop
+    (evict-at-own-length still holds; no mid-wave admission).
+
+    ``clock`` stamps Request.submitted_at/done_at: ``time.perf_counter``
+    in real runs, a virtual-time callable in DES runs (repro.serving).
+    ``prefill_fn``/``step_fn`` let tests inject deterministic stand-ins
+    for the jitted model functions.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, batch: int, prompt_len: int,
-                 max_len: int, mesh=None):
+                 max_len: int, mesh=None, clock=time.perf_counter,
+                 prefill_fn=None, step_fn=None):
         self.cfg, self.params, self.mesh = cfg, params, mesh
         self.B, self.S0, self.Smax = batch, prompt_len, max_len
-        if mesh is not None:
+        self.clock = clock
+        # sliding-window ring caches are batch-synchronized -> wave mode
+        self.continuous = not (cfg.sliding_window and any(
+            cfg.layer_kind(i) == "local" for i in range(cfg.num_layers)))
+        if prefill_fn is not None or step_fn is not None:
+            self.prefill, self.step = prefill_fn, step_fn
+        elif mesh is not None:
             # pin the distributed layout: params/cache stay sharded across
             # decode steps (cache donated), logits replicated for sampling
             from repro.dist.sharding import cache_shardings, state_shardings
@@ -86,14 +118,89 @@ class BatchedServer:
                 build_prefill_step(cfg, mesh, cache_len=max_len))
             self.step = jax.jit(build_serve_step(cfg, mesh))
         self.queue: collections.deque = collections.deque()
-        self.stats = {"served": 0, "decode_steps": 0, "prefills": 0}
+        self.stats = {"served": 0, "decode_steps": 0, "prefills": 0,
+                      "slot_steps": 0}
 
     def submit(self, reqs: List[Request]):
         for r in reqs:
-            r.submitted_at = time.perf_counter()
+            if self.S0 + r.max_new_tokens > self.Smax:
+                raise ValueError(
+                    f"request {r.rid}: prompt_len {self.S0} + "
+                    f"max_new_tokens {r.max_new_tokens} exceeds cache "
+                    f"length {self.Smax}")
+            r.submitted_at = self.clock()
             self.queue.append(r)
 
     def run(self) -> List[Request]:
+        return self._run_continuous() if self.continuous \
+            else self._run_waves()
+
+    # -------------------------------------------------- continuous batching
+    def _admit(self, slots, cache, positions, last):
+        """Fill free slots from the queue: one group prefill for all
+        joiners, merged row-wise into the live cache."""
+        joiners = []
+        for i in range(self.B):
+            if slots[i] is None and self.queue:
+                slots[i] = self.queue.popleft()
+                joiners.append(i)
+        if not joiners:
+            return cache
+        joinset = set(joiners)
+        tokens = jnp.stack(
+            [jnp.asarray(slots[i].prompt[:self.S0])
+             if i in joinset else jnp.zeros((self.S0,), jnp.int32)
+             for i in range(self.B)])
+        out = self.prefill(self.params, {"tokens": tokens})
+        self.stats["prefills"] += 1
+        fresh = out["cache"]
+        if cache is None:
+            cache = fresh
+        else:
+            mask = jnp.asarray([i in joinset for i in range(self.B)])
+            merged = {}
+            if "blocks" in cache:      # scanned: leaves (G, B, ...)
+                merged["blocks"] = _merge_rows(
+                    cache["blocks"], fresh["blocks"], mask, axis=1)
+            if "tail" in cache:        # unscanned: leaves (B, ...)
+                merged["tail"] = _merge_rows(
+                    cache["tail"], fresh["tail"], mask, axis=0)
+            cache = merged
+        first = jax.device_get(jnp.argmax(out["logits"][:, 0], axis=-1))
+        for i in joiners:
+            last[i] = int(first[i])
+            positions[i] = self.S0
+        return cache
+
+    def _run_continuous(self) -> List[Request]:
+        done: List[Request] = []
+        slots: List[Optional[Request]] = [None] * self.B
+        positions = [0] * self.B     # next cache write offset per slot
+        last = [0] * self.B          # last decoded token per slot (host)
+        cache = None
+        while self.queue or any(s is not None for s in slots):
+            cache = self._admit(slots, cache, positions, last)
+            logits, cache = self.step(
+                self.params, cache, jnp.asarray(last, jnp.int32)[:, None],
+                jnp.asarray(positions, jnp.int32))
+            self.stats["decode_steps"] += 1
+            nxt = jax.device_get(jnp.argmax(logits[:, 0], axis=-1))
+            for i, r in enumerate(slots):
+                if r is None:
+                    continue
+                r.out_tokens.append(int(nxt[i]))
+                last[i] = int(nxt[i])
+                positions[i] += 1
+                self.stats["slot_steps"] += 1
+                if len(r.out_tokens) >= r.max_new_tokens:
+                    r.done_at = self.clock()
+                    done.append(r)
+                    self.stats["served"] += 1
+                    slots[i] = None      # evict: slot free next admission
+        return done
+
+    # -------------------------------------------------- legacy wave loop
+    def _run_waves(self) -> List[Request]:
         done: List[Request] = []
         while self.queue:
             wave = [self.queue.popleft()
@@ -116,8 +223,9 @@ class BatchedServer:
                 for i, r in enumerate(wave):
                     if t < r.max_new_tokens:
                         r.out_tokens.append(int(host[i]))
+                        self.stats["slot_steps"] += 1
             for r in wave:
-                r.done_at = time.perf_counter()
+                r.done_at = self.clock()
             done.extend(wave)
             self.stats["served"] += len(wave)
         return done

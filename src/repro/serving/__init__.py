@@ -1,0 +1,25 @@
+"""Online inference as a first-class ensemble workload.
+
+The serving subsystem compiles a seedable traffic process into PST
+pipelines: traffic windows become source tasks whose DES duration is the
+window length, each window's requests decode as one continuous-batching
+wave (``repro.serve.engine.BatchedServer`` in real mode, the
+``simulate_continuous`` cost model in DES), SLA classes map onto frontier
+priorities (``PilotRuntime(preempt=True)`` evicts throughput work for
+latency work), and ``Channel(capacity_bytes=...)`` back-pressures bursty
+producers by staged bytes.  See benchmarks/serve.py for the co-tenant
+train+serve pilot this was built for.
+"""
+from repro.serving.metrics import ServingMetrics                # noqa: F401
+from repro.serving.server import (                              # noqa: F401
+    ContinuousSim,
+    build_serve_pipeline,
+    build_serving_app,
+    simulate_continuous,
+)
+from repro.serving.sla import CLASSES, SLAClass, sla_class      # noqa: F401
+from repro.serving.traffic import (                             # noqa: F401
+    ServeRequest,
+    TrafficModel,
+    build_traffic_pipeline,
+)

@@ -246,6 +246,59 @@ def test_e113_malformed_ports():
     assert "E113" in validate_app([q]).codes()
 
 
+def test_e115_unknown_sla_class():
+    bad = PipelineSpec([Stage([TaskSpec(_noop(), sla="gold")], name="s0")],
+                       name="p")
+    report = validate_app([bad])
+    assert "E115" in report.codes()
+    d = next(d for d in report.diagnostics if d.code == "E115")
+    assert d.pipeline == "p" and d.stage == 0
+    ok = PipelineSpec([Stage([TaskSpec(_noop(), sla="latency"),
+                              TaskSpec(_noop())], name="s0")], name="p")
+    assert "E115" not in validate_app([ok]).codes()
+
+
+def test_e115_capacity_bytes_without_staging():
+    def codes(staging):
+        ch = Channel("meter", capacity_bytes=1 << 20)
+        prod = _chain("prod", outputs=[ch])
+        prod.stages[0].tasks[0].kernel.output_nbytes = 100
+        cons = _chain("cons", inputs={"x": ch})
+        rt = PilotRuntime(slots=2, mode="sim", staging=staging)
+        return validate_app([prod, cons], runtime=rt).codes()
+
+    assert "E115" in codes(None)
+    assert "E115" not in codes(
+        StagingLayer(locality=LocalityMap(2, slots_per_pod=1)))
+
+
+def test_e115_submit_time_guards():
+    bad = PipelineSpec([Stage([TaskSpec(_noop(), sla="gold")], name="s0")],
+                       name="p")
+    with pytest.raises(DiagnosticError):     # runtime guard, not the linter
+        AppManager(PilotRuntime(slots=2, mode="sim")).run(
+            bad, validate="off")
+    metered = _chain("prod", outputs=[Channel("m2", capacity_bytes=64)])
+    with pytest.raises(DiagnosticError):     # bytes need a staging layer
+        AppManager(PilotRuntime(slots=2, mode="sim")).run(
+            metered, validate="off")
+
+
+def test_e106_byte_capacity_wedges_producer():
+    ch = Channel("bmeter", capacity_bytes=100)
+    prod = PipelineSpec(
+        [Stage([TaskSpec(_noop(output_nbytes=80))], name=f"s{i}",
+               outputs=[ch]) for i in range(2)], name="prod")
+    assert "E106" in validate_app([prod]).codes()
+    # drained twin: a consumer retires the first put's bytes in time
+    ch2 = Channel("bmeter2", capacity_bytes=100)
+    prod2 = PipelineSpec(
+        [Stage([TaskSpec(_noop(output_nbytes=80))], name=f"s{i}",
+               outputs=[ch2]) for i in range(2)], name="prod")
+    cons = _chain("cons", 2, inputs={"x": ch2})
+    assert "E106" not in validate_app([prod2, cons]).codes()
+
+
 # ===================================================== validator: W codes
 
 def test_w201_unconsumed_fifo_channel():
@@ -280,6 +333,22 @@ def test_w203_retries_exceed_pods():
 def test_w203_skipped_without_pod_tracking():
     rt = PilotRuntime(slots=2, mode="sim", max_retries=9)
     assert "W203" not in validate_app([_chain("p")], runtime=rt).codes()
+
+
+def test_w206_latency_starvation_risk():
+    lonely = PipelineSpec([Stage([TaskSpec(_noop(), sla="latency")],
+                                 name="s0")], name="p")
+    report = validate_app([lonely])
+    assert "W206" in report.codes() and report.ok
+    # clean twin: any lower-priority task gives preemption a victim pool
+    mixed = [PipelineSpec([Stage([TaskSpec(_noop(), sla="latency")],
+                                 name="s0")], name="p"),
+             _chain("bulk")]
+    assert "W206" not in validate_app(mixed).codes()
+    # throughput-only apps have nothing to starve
+    assert "W206" not in validate_app(
+        [PipelineSpec([Stage([TaskSpec(_noop(), sla="throughput")],
+                             name="s0")], name="p")]).codes()
 
 
 # ===================================================== sanitizer: S codes

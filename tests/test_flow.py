@@ -731,3 +731,79 @@ def test_blocked_pipeline_stays_blocked_across_runs():
     assert prof.n_failed == 0
     assert prof.results["pipelines"]["producer"]["state"] == "done"
     assert prof.results["pipelines"]["consumer"]["state"] == "blocked"
+
+
+# -------------------------------------------------- byte back-pressure
+
+def test_channel_byte_accounting_unit():
+    ch = Channel("u", capacity_bytes=10)
+    ch.put("p0", 1, nbytes=4)
+    ch.put("p1", 2, nbytes=5)
+    assert ch.n_unconsumed_bytes() == 9
+    assert ch.peak_unconsumed_bytes == 9
+    ch.take("c")
+    assert ch.n_unconsumed_bytes() == 5        # fifo retires put0's bytes
+    ch.take("c")
+    assert ch.n_unconsumed_bytes() == 0
+    assert ch.peak_unconsumed_bytes == 9       # high-water mark sticks
+    with pytest.raises(ValueError):
+        Channel("bad", capacity_bytes=0)
+
+
+def test_channel_byte_backpressure_parks_producer():
+    """Channel(capacity_bytes=...): the producer parks once the declared
+    unconsumed payload bytes would exceed the budget, and the budget
+    bounds the channel's high-water mark for the whole run."""
+    from repro.staging import LocalityMap, StagingLayer
+
+    ch = Channel("bb", capacity_bytes=100)
+
+    def put80(c):
+        k = _k(1.0)
+        k.output_nbytes = 80
+        return Stage([TaskSpec(k, name=f"prod.c{c}")], name=f"c{c}",
+                     outputs=[ch])
+
+    prod = PipelineSpec([put80(c) for c in range(4)], name="producer")
+    cons = PipelineSpec(
+        [Stage([TaskSpec(_k(5.0), name=f"slow.r{c}")],
+               name=f"r{c}", inputs={"q": ch}) for c in range(4)],
+        name="slow")
+    staging = StagingLayer(locality=LocalityMap(4, slots_per_pod=2))
+    am = AppManager(PilotRuntime(slots=4, mode="sim", staging=staging))
+    prof = am.run([prod, cons])
+    assert prof.n_failed == 0
+    pipes = prof.results["pipelines"]
+    assert pipes["producer"]["state"] == "done"
+    assert pipes["slow"]["state"] == "done"
+    # 2 puts of 80B never sit unconsumed together: 80+80 > 100
+    assert ch.peak_unconsumed_bytes <= 100
+    assert ch.n_unconsumed_bytes() == 0
+    g = am.session.graph
+    # round 0's take retires put0's bytes at v=1, so c1 proceeds; c2
+    # then parks behind put1's 80B until round 1 takes at v=6, c3
+    # behind put2's until round 2 takes at v=11
+    assert g.tasks["prod.c1"].v_started == 1.0
+    assert g.tasks["prod.c2"].v_started == 6.0
+    assert g.tasks["prod.c3"].v_started == 11.0
+
+
+def test_channel_byte_backpressure_unfed_reports_blocked():
+    from repro.staging import LocalityMap, StagingLayer
+
+    ch = Channel("bfull", capacity_bytes=100)
+
+    def put80(c):
+        k = _k(1.0)
+        k.output_nbytes = 80
+        return Stage([TaskSpec(k, name=f"prod.c{c}")], name=f"c{c}",
+                     outputs=[ch])
+
+    prod = PipelineSpec([put80(c) for c in range(3)], name="producer")
+    staging = StagingLayer(locality=LocalityMap(2, slots_per_pod=1))
+    am = AppManager(PilotRuntime(slots=2, mode="sim", staging=staging))
+    prof = am.run([prod], validate="off")       # W201+E106 by design here
+    pipes = prof.results["pipelines"]
+    assert pipes["producer"]["state"] == "blocked"
+    assert pipes["producer"]["waiting_on"] == "channel_space:bfull"
+    assert len(ch.puts) == 1

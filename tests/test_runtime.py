@@ -318,3 +318,86 @@ def test_metropolis_host_vs_device():
         jnp.array([10.0, 0.0, 0.0, 0.0]), jnp.array([1.0, 10.0, 10.0, 10.0]),
         0, jax.random.PRNGKey(0))
     assert float(nt_dev[0]) == 10.0 and float(nt_dev[1]) == 1.0
+
+
+# ---------------------------------------------------------------- preemption
+
+def test_sim_preemption_evicts_lower_priority():
+    """A ready high-priority task that cannot fit evicts a running
+    priority-0 attempt: eviction is the abandon path (epoch nulled, state
+    NEW), not a failure (no pod blame, no retry spent), and the victim
+    reruns to completion afterwards."""
+    g = TaskGraph()
+    g.add(Task(name="starter", duration=1.0, stage="s"))
+    g.add(Task(name="lowA", duration=50.0, stage="s"))
+    g.add(Task(name="lowB", duration=50.0, stage="s"))
+    g.add(Task(name="hi", duration=5.0, slots=2, priority=10,
+               deps=["starter"], stage="s"))
+    prof = PilotRuntime(slots=2, mode="sim", preempt=True).run(g)
+
+    assert prof.n_preempted >= 1 and prof.n_failed == 0
+    assert all(t.state == TaskState.DONE for t in g.tasks.values())
+    hi, lowA = g.tasks["hi"], g.tasks["lowA"]
+    # hi launched the moment it became ready, not after a 50s task
+    assert hi.v_started == 1.0 and hi.v_finished == 6.0
+    victims = [t for t in (g.tasks["lowA"], g.tasks["lowB"])
+               if any(h["outcome"] == "preempted" for h in t.history)]
+    assert victims
+    for v in victims:
+        assert v.attempts == 2              # evicted attempt + rerun
+        assert not v.excluded_pods()        # preemption never blames a pod
+        assert v.v_finished > hi.v_finished
+
+
+def test_preempted_attempt_history_replays_from_journal():
+    """The journal reconstructs a preempted task's attempt history, and
+    the sanitizer accepts the preempt/requeue record stream."""
+    from repro.analysis import sanitize_file
+
+    with tempfile.TemporaryDirectory() as d:
+        path = f"{d}/j.jsonl"
+        g = TaskGraph()
+        g.add(Task(name="starter", duration=1.0, stage="s"))
+        g.add(Task(name="lowA", duration=50.0, stage="s"))
+        g.add(Task(name="hi", duration=5.0, slots=2, priority=10,
+                   deps=["starter"], stage="s"))
+        prof = PilotRuntime(slots=2, mode="sim", preempt=True,
+                            journal=Journal(path)).run(g)
+        assert prof.n_preempted == 1
+        _, _, history = Journal(path).load_state()
+        assert [h["outcome"] for h in history["lowA"]] == ["preempted"]
+        assert history["lowA"][0]["attempt"] == 1
+        assert sanitize_file(path).ok
+
+
+def test_real_preemption_discards_zombie_result():
+    """Real mode cannot stop the victim's worker thread; its eventual
+    completion must be an inert zombie (epoch mismatch) while the
+    requeued attempt's result is the one that lands."""
+    import threading
+
+    release = threading.Event()
+    calls = []
+
+    def low_run(t):
+        n = len(calls)
+        calls.append(n)
+        release.wait(10.0)
+        return f"low{n}"
+
+    g = TaskGraph()
+    g.add(Task(name="starter",
+               run=lambda t: __import__("time").sleep(0.05), stage="s"))
+    g.add(Task(name="lowA", run=low_run, stage="s"))
+    g.add(Task(name="hi", deps=["starter"], priority=10, slots=2,
+               run=lambda t: release.set() or "hi", stage="s"))
+    prof = PilotRuntime(slots=2, mode="real", preempt=True).run(g)
+
+    assert prof.n_preempted == 1 and prof.n_failed == 0
+    assert all(t.state == TaskState.DONE for t in g.tasks.values())
+    lowA = g.tasks["lowA"]
+    assert len(calls) == 2                  # zombie attempt + rerun
+    assert lowA.result == "low1"            # zombie's "low0" was discarded
+    assert [h["outcome"] for h in lowA.history[:1]] == ["preempted"]
+    assert not lowA.excluded_pods()
+    assert g.tasks["hi"].result == "hi"
