@@ -68,15 +68,23 @@ def build(graph_cls, shape: str, n: int) -> TaskGraph:
     return g
 
 
-def run_one(impl: str, shape: str, n: int) -> dict:
-    graph_cls = TaskGraph if impl == "new" else _LegacyScanGraph
+def run_one(impl: str, shape: str, n: int, *, traced: bool = False) -> dict:
+    graph_cls = TaskGraph if impl in ("new", "new+trace") \
+        else _LegacyScanGraph
     g = build(graph_cls, shape, n)
-    rt = PilotRuntime(slots=SLOTS, mode="sim")
+    tracer = None
+    if traced:
+        from repro.obs import Tracer
+        tracer = Tracer()
+    rt = PilotRuntime(slots=SLOTS, mode="sim", tracer=tracer)
     t0 = time.perf_counter()
     prof = rt.run(g)
     dt = time.perf_counter() - t0
     if prof.n_failed or prof.n_canceled or prof.n_tasks != n:
         raise SystemExit(f"{impl}/{shape}@{n}: bad run")
+    if traced and len(tracer.spans) != n:
+        raise SystemExit(f"{impl}/{shape}@{n}: {len(tracer.spans)} spans "
+                         f"for {n} tasks")
     return {"impl": impl, "shape": shape, "n_tasks": n,
             "seconds": round(dt, 4),
             "events_per_sec": round(n / dt, 1),
@@ -99,6 +107,28 @@ def main(fast: bool = False):
             print(f"  legacy {shape:>5} n={n:>7}: "
                   f"{rows[-1]['events_per_sec']:>10.0f} events/s")
 
+    # tracing overhead: the flight recorder (repro.obs.Tracer) must stay
+    # near-zero-cost — traced events/s within 10% of untraced, best of 5
+    # each, arms alternated so clock-frequency drift hits both equally,
+    # at the largest bag size
+    n_trace = max(new_sizes)
+    un_runs, tr_runs = [], []
+    for _ in range(5):
+        un_runs.append(run_one("new", "bag", n_trace)["events_per_sec"])
+        tr_runs.append(run_one("new+trace", "bag", n_trace,
+                               traced=True)["events_per_sec"])
+    untraced, traced = max(un_runs), max(tr_runs)
+    rows.append({"impl": "new+trace", "shape": "bag", "n_tasks": n_trace,
+                 "seconds": round(n_trace / traced, 4),
+                 "events_per_sec": traced, "t_rts_overhead": None})
+    trace_ratio = traced / untraced
+    print(f"  tracing {n_trace} tasks: {traced:.0f} traced vs "
+          f"{untraced:.0f} untraced events/s (ratio {trace_ratio:.3f})")
+    if trace_ratio < 0.9:
+        raise SystemExit(
+            f"tracing overhead exceeds 10%: {traced:.0f} traced vs "
+            f"{untraced:.0f} untraced events/s (ratio {trace_ratio:.3f})")
+
     # scaling summary: events/sec at the largest size over the smallest —
     # ~1.0 means per-event cost independent of n (linear total)
     summary = {}
@@ -109,6 +139,10 @@ def main(fast: bool = False):
             "events_per_sec_ratio_large_over_small":
                 round(bag[max(sizes)] / bag[min(sizes)], 3),
             "max_n": max(sizes)}
+    summary["tracing"] = {
+        "events_per_sec_traced": traced,
+        "events_per_sec_untraced": untraced,
+        "ratio": round(trace_ratio, 3)}
     out = {"slots": SLOTS, "rows": rows, "summary": summary}
 
     save_results("frontier", rows)

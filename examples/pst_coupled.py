@@ -79,11 +79,16 @@ def validate_only(mode) -> int:
     return 0 if report.ok else 1
 
 
-def main(mode):
+def main(mode, trace_out=None):
     # journal name carries the mode: a sim journal must not be replayed
     # into a real run (same task names would be skipped as already done)
+    tracer = None
+    if trace_out:
+        from repro.obs import Tracer
+        tracer = Tracer()
     rt = PilotRuntime(slots=MEMBERS + 2, mode=mode,
-                      journal=journal_from_env(f"pst_coupled_{mode}"))
+                      journal=journal_from_env(f"pst_coupled_{mode}"),
+                      tracer=tracer)
     am = AppManager(rt)
     prof = am.run(build(mode), validate="error")
 
@@ -114,6 +119,29 @@ def main(mode):
         print("  consumer stages streamed inside the producer's lifetime: "
               "cross-pipeline DAG confirmed")
 
+    if trace_out:
+        from repro.obs import to_chrome
+        from repro.obs.tracer import TASK
+        ts = prof.results["timeseries"]
+        assert ts["n_samples"] > 0, "tracer sampled no metrics ticks"
+        assert not [s for s in tracer.unpaired() if s["cat"] == TASK], \
+            "unpaired task spans at drain end"
+        with open(trace_out, "w") as f:
+            f.write(to_chrome(_live_segments(rt)))
+        print(f"  trace: {len(tracer.spans)} spans, "
+              f"{ts['n_samples']} metric samples -> {trace_out}")
+
+
+def _live_segments(rt):
+    """Chrome-export source: this run's own journal when it was captured
+    (REPRO_JOURNAL_DIR), else the live tracer's spans."""
+    from repro.obs import load_segments
+    from repro.obs.report import segment_from_tracer
+    path = rt.journal.path
+    if path:
+        return [(f"pst_coupled#{s.index}", s) for s in load_segments(path)]
+    return [("pst_coupled", segment_from_tracer(rt.tracer))]
+
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
@@ -121,8 +149,11 @@ if __name__ == "__main__":
                     help="DES mode: modeled durations, instant wall clock")
     ap.add_argument("--validate-only", action="store_true",
                     help="lint the declared pipelines and exit (no run)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="attach a flight recorder (repro.obs.Tracer) and "
+                         "write a Chrome/Perfetto trace here")
     args = ap.parse_args()
     mode = "sim" if args.sim else "real"
     if args.validate_only:
         sys.exit(validate_only(mode))
-    main(mode)
+    main(mode, trace_out=args.trace_out)

@@ -46,6 +46,11 @@ Checked invariants (codes in ``diagnostics.CODES``):
   S306  time disjointness: sim — ``v_finished - v_started`` equals
         ``t_exec + t_data`` to 1e-6; real — ``t_exec + t_data_kernel``
         never exceeds the attempt's wall interval (1 ms tolerance).
+        When records carry the virtual-clock stamp ``vt`` (PR 10) the
+        check extends to SLOTS: two attempts holding the same
+        (pilot, slot_id) must not have overlapping [scheduled.vt,
+        close.vt] windows — the slot timeline the TTC decomposition
+        partitions must be single-occupancy.
 """
 from __future__ import annotations
 
@@ -64,7 +69,7 @@ _REAL_TOL = 1e-3
 class _TaskSeg:
     """Per-task state within one session segment."""
     __slots__ = ("last_epoch", "abandoned", "staged", "releases",
-                 "terminal", "pilot")
+                 "terminal", "pilot", "held")
 
     def __init__(self):
         self.last_epoch: Optional[int] = None
@@ -73,6 +78,7 @@ class _TaskSeg:
         self.releases = 0
         self.terminal = False
         self.pilot: Optional[str] = None  # owning pilot (tagged journals)
+        self.held: List[Tuple[Optional[str], int]] = []  # open attempt's slots
 
 
 class JournalSanitizer:
@@ -93,6 +99,10 @@ class JournalSanitizer:
         self._puts: Set[Tuple[str, str]] = set()
         self._chan_mode: Dict[str, str] = {}
         self._fifo_consumer: Dict[Tuple[str, str], str] = {}
+        # slot occupancy on the vt clock: (pilot, slot_id) -> holder /
+        # latest release time.  Only fed by records carrying ``vt``.
+        self._slot_open: Dict[Tuple[Optional[str], int], str] = {}
+        self._slot_free_at: Dict[Tuple[Optional[str], int], float] = {}
 
     # ------------------------------------------------------------ plumbing
     def _seg(self, task: str) -> _TaskSeg:
@@ -141,6 +151,15 @@ class JournalSanitizer:
                 # other pilots' epoch state must not bleed away
                 self._tasks = {k: s for k, s in self._tasks.items()
                                if s.pilot != tag}
+            if tag is None:
+                self._slot_open = {}
+                self._slot_free_at = {}
+            else:
+                self._slot_open = {k: v for k, v in self._slot_open.items()
+                                   if k[0] != tag}
+                self._slot_free_at = {
+                    k: v for k, v in self._slot_free_at.items()
+                    if k[0] != tag}
             return
         if ev == "channel_put":
             self._on_put(rec)
@@ -153,16 +172,20 @@ class JournalSanitizer:
             return                         # run-level event (pod_lost, ...)
         if ev == "scheduled":
             self._on_scheduled(task, rec)
+            self._slot_acquire(task, rec)
         elif ev == "staged_release":
             self._on_release(task, rec)
         elif ev in _ABANDON_EVENTS:
             seg = self._seg(task)
             seg.abandoned.add(int(rec.get("attempts", 0)))
+            self._slot_release(task, rec)
         elif ev == "finished":
             self._on_finished(task, rec)
+            self._slot_release(task, rec)
         elif ev == "failed":
             if rec.get("state") == "FAILED":
                 self._on_terminal(task)
+            self._slot_release(task, rec)
 
     # ------------------------------------------------------------ checks
     def _on_scheduled(self, task: str, rec: dict):
@@ -223,6 +246,46 @@ class JournalSanitizer:
                     f"t_exec + t_data_kernel exceeds the wall interval "
                     f"by {overlap:g}s: exec and data windows overlap",
                     task=task)
+
+    def _slot_acquire(self, task: str, rec: dict):
+        """Slot single-occupancy on the vt clock (records without ``vt``
+        or ``slot_ids`` — real mode, pre-PR-10 journals — are skipped)."""
+        vt = rec.get("vt")
+        slot_ids = rec.get("slot_ids")
+        if vt is None or not slot_ids:
+            return
+        seg = self._seg(task)
+        pilot = rec.get("pilot")
+        for sid in slot_ids:
+            key = (pilot, int(sid))
+            holder = self._slot_open.get(key)
+            if holder is not None and holder != task:
+                self._violation(
+                    "S306",
+                    f"slot {key[1]} scheduled to {task!r} at vt={vt:g} "
+                    f"while still held by {holder!r}: slot occupancy "
+                    "overlaps", task=task)
+            elif float(vt) < self._slot_free_at.get(key,
+                                                    float("-inf")) - _SIM_TOL:
+                self._violation(
+                    "S306",
+                    f"slot {key[1]} scheduled to {task!r} at vt={vt:g} "
+                    f"before its previous attempt released it at "
+                    f"vt={self._slot_free_at[key]:g}", task=task)
+            self._slot_open[key] = task
+        seg.held = [(pilot, int(s)) for s in slot_ids]
+
+    def _slot_release(self, task: str, rec: dict):
+        vt = rec.get("vt")
+        seg = self._tasks.get(task)
+        if vt is None or seg is None or not seg.held:
+            return
+        for key in seg.held:
+            if self._slot_open.get(key) == task:
+                del self._slot_open[key]
+            prev = self._slot_free_at.get(key, float("-inf"))
+            self._slot_free_at[key] = max(prev, float(vt))
+        seg.held = []
 
     def _on_release(self, task: str, rec: dict):
         seg = self._seg(task)

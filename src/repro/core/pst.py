@@ -435,6 +435,12 @@ class AppManager:
             for (cname, ck), pk in self._replayed_takes.items():
                 if cname == ch.name:
                     ch._reserved[pk] = ck
+            tr = getattr(self.runtime, "tracer", None)
+            if tr is not None:
+                tr.metrics.gauge(f"channel_backlog:{ch.name}",
+                                 ch.n_unconsumed)
+                tr.metrics.gauge(f"channel_backlog_bytes:{ch.name}",
+                                 ch.n_unconsumed_bytes)
         elif cur is not ch:
             raise ValueError(
                 f"two different Channel objects named {ch.name!r} on one "
@@ -810,10 +816,12 @@ class AppManager:
                 pr.state = "waiting"
                 pr.waiting_on = desc
                 self._parked.setdefault(key, []).append(pr)
+                self._note_park(pr, desc)
                 return
             pr.idx = nxt
             pr.state = "running"
             pr.waiting_on = None
+            self._note_unpark(pr)
             self._bind_stage_inputs(stage, pr, nxt)
             deps = pr.stage_task_names[-1] if pr.stage_task_names else []
             tasks = [self._build_task(spec, pr, stage, nxt, j, deps)
@@ -830,6 +838,32 @@ class AppManager:
             self._wake(("future", id(stage)))
             self._emit_outputs(stage, pr, nxt)
             self._fire_on_done(stage, pr)
+
+    def _note_park(self, pr: _PipelineRun, desc: str):
+        """Journal + trace a pipeline parking on an unsatisfiable input
+        (span opens; :meth:`_note_unpark` closes it at the advance).  A
+        pipeline still parked at drain end keeps an open span — the
+        truncated-span convention, same as a preempted attempt."""
+        pr._was_parked = True
+        now = self.session._now() if self.session is not None else 0.0
+        self.runtime.journal.record_event(
+            "pipeline_parked", pipeline=pr.name, on=desc)
+        tr = getattr(self.runtime, "tracer", None)
+        if tr is not None:
+            tr.begin(("park", pr.name), "park", pr.name, now,
+                     pipeline=pr.name, on=desc)
+            tr.metrics.inc("pipeline_parks")
+
+    def _note_unpark(self, pr: _PipelineRun):
+        if not getattr(pr, "_was_parked", False):
+            return
+        pr._was_parked = False
+        now = self.session._now() if self.session is not None else 0.0
+        self.runtime.journal.record_event("pipeline_woken",
+                                          pipeline=pr.name)
+        tr = getattr(self.runtime, "tracer", None)
+        if tr is not None:
+            tr.end(("park", pr.name), now, "woken")
 
     def _fire_on_done(self, stage: Stage, pr: _PipelineRun):
         if stage.on_done is None:
@@ -1015,4 +1049,8 @@ class AppManager:
                     dispatch[p] = dispatch.get(p, 0) + 1
             prof.results["federation"] = {**self.runtime.summary(),
                                           "dispatch": dispatch}
+        tr = getattr(self.runtime, "tracer", None)
+        if tr is not None:
+            prof.results["timeseries"] = tr.timeseries()
+            prof.results["trace"] = tr.summary()
         return prof

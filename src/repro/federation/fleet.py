@@ -117,6 +117,7 @@ class Fleet:
                                      Iterable[PilotRuntime]], *,
                  journal: Optional[Journal] = None,
                  recruiter=None,
+                 tracer=None,
                  pilot_factory: Optional[Callable[[str], PilotRuntime]]
                  = None):
         if not isinstance(pilots, dict):
@@ -130,6 +131,10 @@ class Fleet:
         self.mode = modes.pop()
         self.journal = journal if journal is not None else Journal(None)
         self.recruiter = recruiter
+        # flight recorder (repro.obs.Tracer) shared by the whole fleet:
+        # dispatch decisions, recruit/retire and every pilot's attempt
+        # spans land in ONE trace
+        self.tracer = tracer
         self.pilot_factory = pilot_factory
         self.pilots: Dict[str, PilotRuntime] = {}
         self.retired: set = set()

@@ -63,6 +63,17 @@ class FederatedSession(RuntimeSession):
         if self._init_done and self.fleet.mode == "real":
             self._free["n"] += rt.slots     # joined mid-session: new capacity
         self._started.add(name)
+        if self.fleet.mode == "sim":
+            # per-pilot journals are time-faithful too: every record this
+            # pilot writes carries the fleet session's virtual clock
+            rt.journal.vclock = lambda: self.vnow
+        tr = self.tracer
+        if tr is not None:
+            tr.metrics.gauge(f"pilot_busy:{name}",
+                             lambda n=name: self.pilot_busy(n))
+            if self._init_done:            # recruited mid-run, not seeded
+                tr.instant("pilot", f"recruit:{name}", self._now(),
+                           pilot=name, slots=rt.slots)
         rt.journal.record_event("session_start", mode=rt.mode,
                                 slots=rt.slots)
 
@@ -78,6 +89,9 @@ class FederatedSession(RuntimeSession):
         if self.fleet.mode == "real":
             self._free["n"] -= max(self._free_by.get(name, 0), 0)
         self._free_by[name] = 0
+        if self.tracer is not None:
+            self.tracer.instant("pilot", f"retire:{name}", self._now(),
+                                pilot=name)
 
     def pilot_busy(self, name: str) -> int:
         if self.fleet.mode == "sim":
@@ -135,6 +149,8 @@ class FederatedSession(RuntimeSession):
         if name is None:
             return False
         t.meta["pilot"] = name        # late binding happens HERE
+        if self.tracer is not None:
+            self.tracer.instant("dispatch", t.name, self._now(), pilot=name)
         return True
 
     def _too_wide_sim(self, t: Task) -> bool:
@@ -303,6 +319,9 @@ class FederatedSession(RuntimeSession):
                 continue
             free[name] -= t.slots
             t.meta["pilot"] = name        # late binding happens HERE
+            if self.tracer is not None:
+                self.tracer.instant("dispatch", t.name, self.vnow,
+                                    pilot=name)
             self._launch_sim(t)
 
     def _locality_candidates(self, avail: int) -> List[Task]:

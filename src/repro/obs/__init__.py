@@ -1,0 +1,24 @@
+"""repro.obs: flight-recorder span tracing, metrics timelines, and TTC
+overhead decomposition.
+
+Two complementary surfaces:
+
+* **Live**: hand a :class:`Tracer` to ``PilotRuntime(tracer=...)`` (or a
+  federation ``Fleet(tracer=...)``) — every attempt, park, preemption,
+  pod event and dispatch decision becomes a span/instant on the run's
+  authoritative clock, and the tracer's :class:`MetricsTimeline` samples
+  frontier depth, slot occupancy, channel backlog, staging hit-rate and
+  per-pilot load on clock ticks.  ``AppManager.run`` lands the timeline
+  in ``prof.results["timeseries"]``.
+
+* **Post-hoc**: any journal file replays into the same model —
+  ``python -m repro.obs trace|decompose|critical-path`` (see
+  :mod:`repro.obs.report`).  No live tracer needed.
+"""
+from repro.obs.metrics import MetricsTimeline
+from repro.obs.report import (Segment, critical_path, decompose,
+                              load_segments, to_chrome)
+from repro.obs.tracer import TASK, Tracer
+
+__all__ = ["Tracer", "TASK", "MetricsTimeline", "Segment",
+           "load_segments", "decompose", "to_chrome", "critical_path"]

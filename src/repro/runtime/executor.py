@@ -118,6 +118,7 @@ class PilotRuntime:
                  min_straggler_samples: int = 5,
                  sanitize: bool = False,
                  preempt: bool = False,
+                 tracer=None,
                  on_schedule: Optional[Callable] = None):
         assert mode in ("real", "sim")
         if slots is None:
@@ -175,6 +176,10 @@ class PilotRuntime:
         # preempted attempt is an inert zombie).  Preemption is not a
         # failure: it neither blames the pod nor consumes retry budget.
         self.preempt = preempt
+        # flight recorder (repro.obs.Tracer): every attempt/park/fault
+        # becomes a span on the run's authoritative clock; None = untraced
+        # (hook sites pay one attribute read)
+        self.tracer = tracer
         self.straggler_factor = straggler_factor
         self.min_straggler_samples = min_straggler_samples
         # called as on_schedule(runtime, graph, vnow) before every
@@ -464,6 +469,18 @@ class RuntimeSession:
         # journal replay set, loaded once per session
         self._replayed_done, self._replayed_results, \
             self._replayed_history = runtime.journal.load_state()
+        # observability (repro.obs): sim sessions make the journal
+        # time-faithful — every record carries a ``vt`` field on the
+        # virtual clock beside its wall ``t`` — and the frontier stamps
+        # each task's ready time for the t_sched decomposition term
+        self.tracer = getattr(runtime, "tracer", None)
+        if runtime.mode == "sim":
+            runtime.journal.vclock = lambda: self.vnow
+            self.graph.clock = lambda: self.vnow
+        if self.tracer is not None:
+            self.tracer.clock = ("virtual" if runtime.mode == "sim"
+                                 else "wall")
+            self._register_gauges()
         # segment marker: epoch/attempt invariants reset here (a restart
         # legitimately re-runs tasks from attempt one), and replay parsers
         # skip it (no "task" key)
@@ -477,6 +494,47 @@ class RuntimeSession:
         if self.rt.mode == "sim":
             return self._busy
         return self.rt.slots - self._free["n"]
+
+    # ------------------------------------------------------- observability
+    def _now(self) -> float:
+        """The run's authoritative clock: virtual now in sim mode, wall
+        seconds since the first drain in real mode (0.0 before it)."""
+        if self.rt.mode == "sim":
+            return self.vnow
+        return 0.0 if self._t0 is None else time.perf_counter() - self._t0
+
+    def _register_gauges(self):
+        """Built-in gauges over live session state, sampled by the drain
+        loops on clock ticks (repro.obs.MetricsTimeline)."""
+        m = self.tracer.metrics
+        g = self.graph
+        m.gauge("frontier_depth", lambda: len(g._in_frontier))
+        m.gauge("frontier_slots", g.frontier_slots)
+        m.gauge("busy_slots", lambda: self.busy_slots)
+        m.gauge("capacity_slots", lambda: self.rt.slots)
+        m.gauge("unfinished_tasks", lambda: len(g) - g._n_terminal)
+        m.gauge("retries", lambda: self.prof.n_retries)
+        m.gauge("preempted", lambda: self.prof.n_preempted)
+        staging = getattr(self.rt, "staging", None)
+        if staging is not None:
+            m.gauge("staging_hit_rate", lambda: staging.planner.hit_rate)
+
+    def _sched_extra(self, t: Task) -> Dict[str, Any]:
+        """Observability fields on a ``scheduled`` record: granted slot
+        ids (same-slot overlap checking + per-slot trace rows), width,
+        owning pipeline, and — on the FIRST attempt only — the dep edges
+        the critical-path walk needs (retries keep the original's)."""
+        extra = _staged_extra(t)
+        ids = t.meta.get("slot_ids")
+        if ids:
+            extra["slot_ids"] = list(ids)
+        if t.slots != 1:
+            extra["width"] = t.slots
+        if "pipeline" in t.meta:
+            extra["pipeline"] = t.meta["pipeline"]
+        if t.attempts == 1 and t.deps:
+            extra["deps"] = list(t.deps)
+        return extra
 
     # ------------------------------------------------------- dispatch hooks
     # Indirection points the federation layer (repro.federation) overrides
@@ -689,6 +747,9 @@ class RuntimeSession:
         if not rt._dead_ids:
             rt._drop_pending = False
         rt.journal.record_event("pod_revived", pod=pod, n_slots=len(ids))
+        if self.tracer is not None:
+            self.tracer.instant("pod", f"pod_revived:{pod}", self._now(),
+                                pod=pod, n_slots=len(ids))
         prof.events.append({"event": "pod_revived", "pod": pod,
                             "n_slots": len(ids), "v": self.vnow})
         return len(ids)
@@ -714,8 +775,18 @@ class RuntimeSession:
         t.t_scheduled = time.perf_counter()
         t.v_started = self.vnow
         t.meta["launch_epoch"] = t.attempts
-        rt.journal.record(t, "scheduled", pod=rt._task_pod(t),
-                          **_staged_extra(t))
+        v_ready = t.meta.pop("v_ready", None)    # retry re-stamps afresh
+        pod = rt._task_pod(t)
+        journal = rt.journal
+        if journal._fh is not None or journal.observer is not None:
+            extra = self._sched_extra(t)
+            if t_data:
+                extra["t_data"] = t_data    # planned stage-in seconds
+            if v_ready is not None:
+                extra["v_ready"] = v_ready
+            journal.record(t, "scheduled", pod=pod, **extra)
+        if self.tracer is not None:
+            self.tracer.task_begin(t, self.vnow, pod, t_data)
         heapq.heappush(self._heap,
                        (self.vnow + max(t.duration, 0.0) + t_data,
                         self._seq, t.attempts, t))
@@ -768,6 +839,8 @@ class RuntimeSession:
         rt.journal.record(t, "finished", t_exec=max(t.duration, 0.0),
                           t_data=t.meta.get("t_data_attempt", 0.0),
                           v_started=t.v_started, v_finished=t.v_finished)
+        if self.tracer is not None:
+            self.tracer.task_end(t, self.vnow, "done")
         rt._staging_finish(t)
         if t.speculative_of:
             # the duplicate won: complete the straggling original
@@ -786,6 +859,8 @@ class RuntimeSession:
                     ort._release_slots(orig)
                 orig.meta["launch_epoch"] = None
                 ort.journal.record(orig, "finished", by="speculative")
+                if self.tracer is not None and was_running:
+                    self.tracer.task_end(orig, self.vnow, "superseded")
                 ort._staging_finish(orig)
                 self._queue_callback(orig)
             self._spec_launched.pop(t.speculative_of, None)
@@ -800,6 +875,8 @@ class RuntimeSession:
                 twin.record_attempt("canceled", pod=trt._task_pod(twin))
                 twin.state = TaskState.CANCELED
                 trt.journal.record(twin, "canceled", by="original")
+                if self.tracer is not None:
+                    self.tracer.task_end(twin, self.vnow, "canceled")
                 trt._staging_finish(twin)
                 prof.t_data += twin.t_data
             self._queue_callback(t)
@@ -836,6 +913,9 @@ class RuntimeSession:
             rt.staging.on_pod_lost(pod)
         rt.journal.record_event("pod_lost", pod=pod, n_slots=len(ids),
                                 v=self.vnow)
+        if self.tracer is not None:
+            self.tracer.instant("pod", f"pod_lost:{pod}", self.vnow,
+                                pod=pod, n_slots=len(ids))
         prof.events.append({"event": "pod_lost", "pod": pod,
                             "n_slots": len(ids), "v": self.vnow})
         if rt.faults is not None and rt.faults.respawn_after is not None:
@@ -856,6 +936,8 @@ class RuntimeSession:
         t.error = err
         prof.n_pod_lost += 1
         rt.journal.record(t, "pod_lost", pod=pod)
+        if self.tracer is not None:       # truncated span, never an overlap
+            self.tracer.task_end(t, self.vnow, "pod_lost")
         if t.speculative_of is not None:
             # a clone needs no retry — the original is still running
             t.state = TaskState.CANCELED
@@ -940,6 +1022,8 @@ class RuntimeSession:
         v.record_attempt("preempted", pod=rt._task_pod(v))
         prof.n_preempted += 1
         rt.journal.record(v, "preempted", pod=rt._task_pod(v))
+        if self.tracer is not None:
+            self.tracer.task_end(v, self.vnow, "preempted")
         v.meta.pop("slot_ids", None)
         v.meta.pop("slots_released", None)
         v.error = None
@@ -965,8 +1049,15 @@ class RuntimeSession:
 
     def _drain_sim(self):
         rt, graph, prof = self.rt, self.graph, self.prof
+        # hoisted: one bound method, not two attribute hops per event
+        _sample = (self.tracer.metrics.maybe_sample
+                   if self.tracer is not None else None)
+        _sampled_at = None
         while True:
             self._flush_callbacks()
+            if _sample is not None and self.vnow != _sampled_at:
+                _sampled_at = self.vnow
+                _sample(_sampled_at)
             self._housekeeping_sim()
             self._overhead(self._schedule_sim)
 
@@ -1092,9 +1183,15 @@ class RuntimeSession:
                         (dup.v_started + med + t_data,
                          self._seq, dup.attempts, dup))
                     self._seq += 1
+                    extra = self._sched_extra(dup)
+                    if t_data:
+                        extra["t_data"] = t_data
+                    pod = rt._task_pod(dup)
                     rt.journal.record(dup, "scheduled", speculative=True,
-                                      pod=rt._task_pod(dup),
-                                      **_staged_extra(dup))
+                                      pod=pod, **extra)
+                    if self.tracer is not None:
+                        self.tracer.task_begin(dup, dup.v_started,
+                                               pod=pod, t_data=t_data)
                     self._spec_launched[t.name] = dup
 
     # ------------------------------------------------------------ real mode
@@ -1150,6 +1247,9 @@ class RuntimeSession:
         if rt.staging is not None:
             rt.staging.on_pod_lost(pod)
         rt.journal.record_event("pod_lost", pod=pod, n_slots=len(ids))
+        if self.tracer is not None:
+            self.tracer.instant("pod", f"pod_lost:{pod}", elapsed,
+                                pod=pod, n_slots=len(ids))
         prof.events.append({"event": "pod_lost", "pod": pod,
                             "n_slots": len(ids), "elapsed": elapsed})
         if rt.faults is not None and rt.faults.respawn_after is not None:
@@ -1178,6 +1278,8 @@ class RuntimeSession:
         t.error = err
         prof.n_pod_lost += 1
         rt.journal.record(t, reason, pod=pod)
+        if self.tracer is not None:
+            self.tracer.task_end(t, self._now(), reason)
         t.meta.pop("slot_ids", None)
         t.meta.pop("slots_released", None)
         if t.attempts <= rt.max_retries:
@@ -1223,6 +1325,8 @@ class RuntimeSession:
         v.record_attempt("preempted", pod=rt._task_pod(v))
         prof.n_preempted += 1
         rt.journal.record(v, "preempted", pod=rt._task_pod(v))
+        if self.tracer is not None:
+            self.tracer.task_end(v, self._now(), "preempted")
         v.meta.pop("slot_ids", None)
         v.meta.pop("slots_released", None)
         v.error = None
@@ -1241,7 +1345,7 @@ class RuntimeSession:
             # staged-input transfers: between pop_ready and kernel launch,
             # on the worker (transfers overlap across tasks); the restamp
             # keeps t_exec and t_data disjoint in the TTC decomposition
-            rt._stage_in_task(t)
+            t.meta["t_data_attempt"] = rt._stage_in_task(t)
             t.t_started = time.perf_counter()
             if t.run is not None:
                 # held locally until past the zombie check below: an
@@ -1291,8 +1395,13 @@ class RuntimeSession:
             rt.journal.record(
                 t, "finished" if t.state == TaskState.DONE else "failed",
                 pod=pod, t_exec=span,
+                t_data=t.meta.get("t_data_attempt", 0.0),
                 t_data_kernel=t.meta.get("t_data_kernel", 0.0),
                 wall=max(t.t_finished - t.t_started, 0.0))
+            if self.tracer is not None:
+                self.tracer.task_end(
+                    t, self._now(),
+                    "done" if t.state == TaskState.DONE else "failed")
             if t.state.terminal:
                 # cumulative across attempts, charged once at the end
                 prof.t_data += t.t_data
@@ -1333,8 +1442,10 @@ class RuntimeSession:
         t.state = TaskState.RUNNING
         t.t_scheduled = time.perf_counter()
         t.meta["launch_epoch"] = t.attempts
-        rt.journal.record(t, "scheduled", pod=rt._task_pod(t),
-                          **_staged_extra(t))
+        pod = rt._task_pod(t)
+        rt.journal.record(t, "scheduled", pod=pod, **self._sched_extra(t))
+        if self.tracer is not None:
+            self.tracer.task_begin(t, self._now(), pod=pod)
         self._inflight += 1
         th = threading.Thread(target=self._execute_real,
                               args=(t,), daemon=True)
@@ -1345,9 +1456,13 @@ class RuntimeSession:
     def _drain_real_loop(self, workers: List[threading.Thread]):
         rt, graph, prof = self.rt, self.graph, self.prof
         cv = self._cv
+        _sample = (self.tracer.metrics.maybe_sample
+                   if self.tracer is not None else None)
         with cv:
             while True:
                 self._flush_callbacks()
+                if _sample is not None:
+                    _sample(self._now())
                 self._housekeeping_real()
                 self._check_faults_real()
                 t0 = time.perf_counter()

@@ -53,6 +53,12 @@ class Journal:
     #: the live-sanitizer hook (analysis.JournalSanitizer.observe).  Also
     #: fires when ``path`` is None, so in-memory runs can be checked.
     observer = None
+    #: optional zero-arg callable returning the authoritative run clock.
+    #: A sim-mode RuntimeSession sets it to ``lambda: session.vnow`` so
+    #: EVERY record (task, run-level, flow) carries a ``vt`` field beside
+    #: the wall ``t`` — sim journals are time-faithful on the clock the
+    #: DES actually ran on, which is what repro.obs decomposes over.
+    vclock = None
     #: name claimed in _claimed_names (journal_from_env only)
     _claimed_name: Optional[str] = None
 
@@ -78,6 +84,8 @@ class Journal:
     def _emit(self, rec: dict):
         if self.tag is not None:
             rec.setdefault("pilot", self.tag)
+        if self.vclock is not None:
+            rec.setdefault("vt", self.vclock())
         if self._fh is not None:
             self._fh.write(json.dumps(rec, default=str) + "\n")
         if self.observer is not None:

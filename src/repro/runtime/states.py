@@ -143,6 +143,10 @@ class TaskGraph:
         self._heap: List = []    # (-priority, tid, name), lazily pruned
         self._width_counts: Dict[int, int] = {}    # slots -> frontier count
         self._n_terminal = 0
+        # optional zero-arg run clock (a sim RuntimeSession sets it to its
+        # virtual now): frontier entry stamps task.meta["v_ready"], the
+        # ready-timestamp the t_sched term of the TTC decomposition needs
+        self.clock: Optional[Callable[[], float]] = None
         for t in list(self.tasks.values()):    # pre-populated dict support
             self._index(t)
 
@@ -181,6 +185,11 @@ class TaskGraph:
                            (-task.priority, task.tid, task.name))
             w = task.slots
             self._width_counts[w] = self._width_counts.get(w, 0) + 1
+            if self.clock is not None:
+                # setdefault: a pop_ready/requeue round-trip keeps the
+                # ORIGINAL ready time; a retry (launch popped the key)
+                # stamps afresh
+                task.meta.setdefault("v_ready", self.clock())
 
     def _frontier_discard(self, task: Task):
         if task.name in self._in_frontier:

@@ -1,0 +1,302 @@
+"""Flight recorder (repro.obs): span tracing, TTC decomposition, exports.
+
+Covers the observability acceptance surface:
+
+  - span pairing: every task attempt opens and closes exactly one span on
+    the virtual clock; a clean drain ends with zero open task spans
+  - the decomposition identity: per-slot TTC = t_exec + t_data + t_sched
+    + t_block + t_idle (+ t_exec_lost) exactly, residual < 1e-6, as a
+    property over random DAGs
+  - fault/preemption runs: truncated attempts (pod_lost, preempted) end
+    their span at the truncation time, never overlap the retry's span,
+    and the lost exec time is attributed (t_exec_lost)
+  - Chrome trace_event export is deterministic (byte-identical across
+    loads) and schema-valid
+  - critical path on a hand-built diamond journal, with per-link slack
+  - journal sim-fidelity: every sim record carries wall ``t`` AND ``vt``;
+    a hand-built same-slot overlap on vt trips the sanitizer's S306
+  - metrics timelines land in prof.results["timeseries"] and stay
+    bounded by adaptive decimation
+"""
+import json
+import os
+import tempfile
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.obs import (MetricsTimeline, Tracer, critical_path, decompose,
+                       load_segments, to_chrome)
+from repro.obs.tracer import TASK
+from repro.runtime.executor import PilotRuntime
+from repro.runtime.faults import FaultInjector
+from repro.runtime.journal import Journal
+from repro.runtime.states import Task, TaskGraph
+
+
+def _bag(n, duration=1.0):
+    g = TaskGraph()
+    for i in range(n):
+        g.add(Task(name=f"t{i:03d}", duration=duration, stage="s"))
+    return g
+
+
+# ------------------------------------------------------------ span pairing
+def test_every_attempt_is_one_paired_span():
+    tr = Tracer()
+    g = _bag(40)
+    prof = PilotRuntime(slots=4, mode="sim", tracer=tr).run(g)
+    assert prof.n_tasks == 40 and prof.n_failed == 0
+    assert tr.clock == "virtual"
+    spans = [s for s in tr.spans if s["cat"] == TASK]
+    assert len(spans) == 40
+    assert {s["task"] for s in spans} == set(g.tasks)
+    for s in spans:
+        assert s["outcome"] == "done"
+        assert s["attempt"] == 1
+        assert s["t1"] - s["t0"] == pytest.approx(1.0)
+    assert not [s for s in tr.unpaired() if s["cat"] == TASK]
+    ts = tr.timeseries()
+    assert ts["counters"]["attempts_done"] == 40
+    assert ts["histograms"]["attempt_span"]["n"] == 40
+    assert ts["n_samples"] > 0
+    assert "frontier_depth" in ts["gauges"]
+    assert "busy_slots" in ts["gauges"]
+
+
+def test_unpaired_spans_are_reported():
+    tr = Tracer()
+    t = Task(name="orphan", duration=1.0, stage="s")
+    t.attempts = 1
+    tr.task_begin(t, 0.0)
+    open_spans = tr.unpaired()
+    assert len(open_spans) == 1
+    assert open_spans[0]["task"] == "orphan" and open_spans[0]["t1"] is None
+    assert tr.summary()["n_open"] == 1
+
+
+# --------------------------------------------------- decomposition identity
+def _random_dag(rng_deps, durations):
+    g = TaskGraph()
+    names = [f"t{i:03d}" for i in range(len(durations))]
+    for i, (dur, dep_draw) in enumerate(zip(durations, rng_deps)):
+        deps = [names[d % i] for d in dep_draw] if i else []
+        g.add(Task(name=names[i], duration=dur, stage="s",
+                   deps=sorted(set(deps))))
+    return g
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.floats(min_value=0.1, max_value=9.0),
+                min_size=2, max_size=25),
+       st.data())
+def test_decomposition_identity_random_dags(durations, data):
+    """TTC = t_exec + t_data + t_sched + t_block + t_idle per slot,
+    exactly, for arbitrary DAG shapes."""
+    deps = [data.draw(st.lists(st.integers(0, 1000), max_size=2),
+                      label=f"deps{i}") for i in range(len(durations))]
+    g = _random_dag(deps, durations)
+    path = os.path.join(tempfile.mkdtemp(prefix="repro_obs_"), "run.jsonl")
+    prof = PilotRuntime(slots=3, mode="sim", journal=Journal(path)).run(g)
+    assert prof.n_failed == 0
+
+    seg = load_segments(path)[-1]
+    rep = decompose(seg)
+    assert rep["n_open"] == 0
+    assert rep["residual_max"] < 1e-6
+    tot = rep["totals"]
+    assert tot["t_exec"] == pytest.approx(sum(durations), abs=1e-6)
+    span = seg.w1 - seg.w0
+    budget = span * len(rep["slots"])
+    spent = sum(tot[k] for k in
+                ("t_exec", "t_data", "t_sched", "t_block", "t_idle",
+                 "t_exec_lost"))
+    assert spent == pytest.approx(budget, abs=1e-6)
+
+
+# ------------------------------------------------ truncated spans: faults
+def test_fault_run_truncated_spans_and_lost_time(tmp_path):
+    """Pod loss truncates the running attempts' spans at the kill time;
+    the decomposition attributes their exec time to t_exec_lost and the
+    journal still balances to residual ~0."""
+    tr = Tracer()
+    path = str(tmp_path / "faults.jsonl")
+    g = _bag(24, duration=2.0)
+    faults = FaultInjector(kill_every=7.0, pods=["pod0", "pod1"],
+                           max_kills=2, respawn_after=3.0)
+    prof = PilotRuntime(slots=4, mode="sim", journal=Journal(path),
+                        faults=faults, tracer=tr).run(g)
+    assert prof.n_tasks == 24 and prof.n_failed == 0
+
+    lost = [s for s in tr.spans if s["outcome"] == "pod_lost"]
+    assert lost, "fault injection produced no truncated spans"
+    by_task = {}
+    for s in tr.spans:
+        by_task.setdefault(s["task"], []).append(s)
+    for s in lost:
+        assert s["t1"] is not None and s["t1"] >= s["t0"]
+        retries = [r for r in by_task[s["task"]]
+                   if r["attempt"] > s["attempt"]]
+        assert retries, f"{s['task']} lost its pod but never retried"
+        # truncation keeps attempt spans disjoint per task
+        assert all(r["t0"] >= s["t1"] - 1e-9 for r in retries)
+    assert not [s for s in tr.unpaired() if s["cat"] == TASK]
+    assert [e for e in tr.events if e["name"].startswith("pod_lost:")]
+
+    rep = decompose(load_segments(path)[-1])
+    assert rep["residual_max"] < 1e-6 and rep["n_open"] == 0
+    assert rep["totals"]["t_exec_lost"] > 0
+    assert tr.timeseries()["counters"]["attempts_pod_lost"] == len(lost)
+
+
+def test_preempted_attempt_is_truncated_span():
+    tr = Tracer()
+    g = TaskGraph()
+    g.add(Task(name="starter", duration=1.0, stage="s"))
+    g.add(Task(name="lowA", duration=50.0, stage="s"))
+    g.add(Task(name="lowB", duration=50.0, stage="s"))
+    g.add(Task(name="hi", duration=5.0, slots=2, priority=10,
+               deps=["starter"], stage="s"))
+    prof = PilotRuntime(slots=2, mode="sim", preempt=True,
+                        tracer=tr).run(g)
+    assert prof.n_preempted >= 1 and prof.n_failed == 0
+
+    evicted = [s for s in tr.spans if s["outcome"] == "preempted"]
+    assert evicted
+    for s in evicted:
+        assert s["t1"] == pytest.approx(1.0)     # truncated when hi arrived
+        rerun = [r for r in tr.spans if r["task"] == s["task"]
+                 and r["outcome"] == "done"]
+        assert len(rerun) == 1 and rerun[0]["t0"] >= s["t1"]
+    assert not [s for s in tr.unpaired() if s["cat"] == TASK]
+
+
+# --------------------------------------------------------- chrome export
+def test_chrome_export_is_byte_identical_and_schema_valid(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    g = _random_dag([[], [0], [0], [1, 2]], [3.0, 1.0, 2.0, 1.0])
+    PilotRuntime(slots=2, mode="sim", journal=Journal(path)).run(g)
+
+    one = to_chrome([("run", s) for s in load_segments(path)])
+    two = to_chrome([("run", s) for s in load_segments(path)])
+    assert one == two                       # deterministic, byte for byte
+
+    doc = json.loads(one)
+    evs = doc["traceEvents"]
+    assert {e["ph"] for e in evs} <= {"M", "X", "i"}
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert xs and all(e["dur"] >= 0 and e["ts"] >= 0 for e in xs)
+    assert any(e["name"] == "process_name" for e in evs if e["ph"] == "M")
+    cats = {e["cat"] for e in xs}
+    assert "exec" in cats and ("idle" in cats or "sched" in cats)
+
+
+# --------------------------------------------------------- critical path
+def _write_diamond(path):
+    """A -> (B: 2s, C: 5s) -> D on two slots, by hand: C is critical."""
+    recs = [
+        {"t": 0.0, "event": "session_start", "vt": 0.0, "mode": "sim"},
+        _sched("A", 1, 0.0), _fin("A", 1, 0.0, 1.0),
+        _sched("B", 1, 1.0), _sched("C", 1, 1.0),
+        _fin("B", 1, 1.0, 3.0), _fin("C", 1, 1.0, 6.0),
+        _sched("D", 1, 6.0), _fin("D", 1, 6.0, 7.0),
+    ]
+    deps = {"B": ["A"], "C": ["A"], "D": ["B", "C"]}
+    for r in recs:
+        if r.get("event") == "scheduled":
+            r["deps"] = deps.get(r["task"], [])
+    with open(path, "w") as f:
+        for r in recs:
+            f.write(json.dumps(r) + "\n")
+
+
+def _sched(name, attempt, vt, **kw):
+    return {"t": vt, "vt": vt, "task": name, "event": "scheduled",
+            "state": "SCHEDULED", "attempts": attempt, **kw}
+
+
+def _fin(name, attempt, v0, v1, **kw):
+    return {"t": v1, "vt": v1, "task": name, "event": "finished",
+            "state": "DONE", "attempts": attempt, "t_exec": v1 - v0,
+            "t_data": 0.0, "v_started": v0, "v_finished": v1, **kw}
+
+
+def test_critical_path_on_diamond(tmp_path):
+    path = str(tmp_path / "diamond.jsonl")
+    _write_diamond(path)
+    seg = load_segments(path)[-1]
+
+    chains = critical_path(seg, k=3)
+    assert chains
+    top = chains[0]
+    assert [ln["task"] for ln in top["links"]] == ["A", "C", "D"]
+    assert top["ttc"] == pytest.approx(7.0)
+    # D starts the instant C finishes: zero slack on the critical edge
+    assert top["links"][-1]["slack"] == pytest.approx(0.0)
+
+    rep = decompose(seg)
+    assert rep["residual_max"] < 1e-6
+    assert rep["totals"]["t_exec"] == pytest.approx(1 + 2 + 5 + 1)
+
+
+# ------------------------------------------------- journal sim fidelity
+def test_sim_journal_records_carry_wall_and_virtual_time(tmp_path):
+    path = str(tmp_path / "vt.jsonl")
+    PilotRuntime(slots=2, mode="sim",
+                 journal=Journal(path)).run(_bag(6, duration=2.0))
+    recs = [json.loads(ln) for ln in open(path)]
+    assert recs
+    for r in recs:
+        assert "t" in r and "vt" in r, f"record missing clocks: {r}"
+    done = [r for r in recs if r["event"] == "finished"]
+    assert done and all(r["vt"] == r["v_finished"] for r in done)
+
+
+def test_sanitizer_s306_rejects_same_slot_overlap_on_vt(tmp_path):
+    """Two attempts granted the same slot id with overlapping [v_started,
+    v_finished) is a sim-fidelity violation the sanitizer must flag."""
+    from repro.analysis.sanitizer import sanitize_file
+    path = str(tmp_path / "overlap.jsonl")
+    recs = [
+        {"t": 0.0, "event": "session_start", "vt": 0.0, "mode": "sim"},
+        _sched("a", 1, 0.0, slot_ids=[0]),
+        _sched("b", 1, 1.0, slot_ids=[0]),       # slot 0 still held by a
+        _fin("a", 1, 0.0, 3.0), _fin("b", 1, 1.0, 4.0),
+    ]
+    with open(path, "w") as f:
+        for r in recs:
+            f.write(json.dumps(r) + "\n")
+    report = sanitize_file(path)
+    assert "S306" in report.codes(), report.format()
+
+
+# ------------------------------------------------------- metrics timeline
+def test_timeseries_lands_in_prof_results():
+    from repro.core import AppManager, Kernel, PipelineSpec, Stage, TaskSpec
+    k = Kernel("synthetic.noop")
+    k.sim_duration = 1.0
+    spec = PipelineSpec([Stage([TaskSpec(k, name=f"s.t{i}")
+                                for i in range(4)], name="only")],
+                        name="p")
+    rt = PilotRuntime(slots=2, mode="sim", tracer=Tracer())
+    prof = AppManager(rt).run([spec])
+    ts = prof.results["timeseries"]
+    assert ts["n_samples"] > 0
+    assert ts["counters"]["attempts_done"] == 4
+    assert len(ts["t"]) == ts["n_samples"]
+    for series in ts["gauges"].values():
+        assert len(series) == ts["n_samples"]
+    assert prof.results["trace"]["n_open"] == 0
+
+
+def test_metrics_decimation_keeps_timeline_bounded():
+    m = MetricsTimeline(max_samples=16)
+    m.gauge("x", lambda: 1.0)
+    for i in range(10_000):
+        m.maybe_sample(float(i))
+    assert len(m.t) <= 16
+    s = m.series()
+    assert s["n_samples"] == len(s["t"]) == len(s["gauges"]["x"])
+    # decimation keeps the earliest and tracks the latest region
+    assert s["t"][0] == 0.0 and s["t"][-1] > 5_000
